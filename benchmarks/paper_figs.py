@@ -1,0 +1,468 @@
+"""Paper-figure/table reproductions (one function per artifact).
+
+Every function prints ``name,value,derived`` CSV rows and returns a dict of
+headline numbers used by run.py for the summary + claim validation.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.sampling import (Estimate, StratumSummary,
+                                 collapsed_strata_estimate,
+                                 phase2_sizes_for_margin, srs_estimate,
+                                 stratified_estimate, summarize_strata,
+                                 two_phase_estimate)
+from repro.simcpu import CONFIGS, get_population
+
+from .simcpu_common import (NUM_STRATA, all_apps, build_experiment,
+                            scheme_selection, weighted_estimate)
+
+
+def _row(name: str, value, derived: str = "") -> None:
+    print(f"{name},{value},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------- Fig 1/6
+def bench_cpi_distributions() -> dict:
+    """Fig 1 + Fig 6: CPI dispersion per app; aggregation over longer
+    regions (10M/100M instructions = means of 10/100 consecutive 1M
+    regions) lowers dispersion."""
+    t0 = time.time()
+    out = {}
+    for name in all_apps():
+        exp = build_experiment(name)
+        cpi = exp.census(0)
+        cvs = []
+        for agg in (1, 10, 100):
+            n = (cpi.shape[0] // agg) * agg
+            c = cpi[:n].reshape(-1, agg).mean(axis=1)
+            cvs.append(float(c.std() / c.mean()))
+        out[name] = cvs
+        _row(f"fig1_cv_{name}", round(cvs[0], 3),
+             f"cv10M={cvs[1]:.3f};cv100M={cvs[2]:.3f}")
+    mono = sum(1 for v in out.values() if v[0] >= v[1] >= v[2])
+    _row("fig1_dispersion_monotone_apps", mono, "of 10 (expect ~10)")
+    _row("fig1_time_s", round(time.time() - t0, 1))
+    return {"monotone_apps": mono}
+
+
+# ---------------------------------------------------------------------- Fig 5
+def bench_config_sweep() -> dict:
+    """Fig 5: per-app IPC across Configs 0-6 with tight phase-1 CIs."""
+    t0 = time.time()
+    geo = []
+    for cfg_i in range(7):
+        ipcs = []
+        for name in all_apps():
+            exp = build_experiment(name)
+            cpi1 = exp.cpi(cfg_i, exp.idx1)
+            est = srs_estimate(cpi1)
+            ipcs.append(1.0 / est.mean)
+            if cfg_i in (0, 6):
+                _row(f"fig5_ipc_{name}_cfg{cfg_i}", round(1 / est.mean, 3),
+                     f"margin_pct={est.margin_pct:.2f}")
+        geo.append(float(np.exp(np.mean(np.log(ipcs)))))
+    speedup = geo[6] / geo[0]
+    _row("fig5_geomean_ipc_cfg0", round(geo[0], 3))
+    _row("fig5_geomean_ipc_cfg6", round(geo[6], 3))
+    _row("fig5_speedup_cfg6_over_cfg0", round(speedup, 3),
+         "paper: 1.68 (1.52->2.56)")
+    _row("fig5_time_s", round(time.time() - t0, 1))
+    return {"speedup": speedup, "geo0": geo[0], "geo6": geo[6]}
+
+
+# ------------------------------------------------------------------- helpers
+def _analytical_margin(exp, scheme: str, cfg_i: int,
+                       kmeans_seed: int = 0) -> float:
+    """95% margin (%) for one-unit-per-stratum stratified sampling using
+    exact within-stratum variances (census for BBV, phase-1 for RFV/DG)."""
+    if scheme == "random":
+        cpi = exp.census(cfg_i)
+        n = 20
+        var = float(cpi.var(ddof=1)) / n
+        est = Estimate(mean=float(cpi.mean()), variance=var, n=n,
+                       df=float(n - 1))
+        return est.margin_pct
+    if scheme == "bbv":
+        labels, weights = exp.bbv_labels, exp.bbv_weights
+        cpi = exp.census(cfg_i)
+    else:
+        labels = exp.rfv_labels if scheme == "rfv" else exp.dg_labels
+        weights = exp.rfv_weights if scheme == "rfv" else exp.dg_weights
+        cpi = exp.cpi(cfg_i, exp.idx1)
+    summ = []
+    for h in range(NUM_STRATA):
+        m = labels == h
+        if m.sum() < 2:
+            summ.append(StratumSummary(weight=float(weights[h]),
+                                       n=2, mean=float(cpi[m].mean())
+                                       if m.any() else 0.0, var=0.0))
+            continue
+        v = float(cpi[m].var(ddof=1))
+        summ.append(StratumSummary(weight=float(weights[h]), n=1,
+                                   mean=float(cpi[m].mean()), var=v))
+    # one unit per stratum: v(ybar) = sum W_h^2 s_h^2 (n_h = 1)
+    var = sum(s.weight ** 2 * s.var for s in summ)
+    mean = sum(s.weight * s.mean for s in summ)
+    est = Estimate(mean=mean, variance=var, n=NUM_STRATA,
+                   df=float(NUM_STRATA // 2))
+    return est.margin_pct
+
+
+# ---------------------------------------------------------------------- Fig 7
+def bench_ci_analytical() -> dict:
+    """Fig 7: analytical 95% margins at n=20 for the four schemes
+    (config 6, stratifications built from config-0 data)."""
+    t0 = time.time()
+    worse_than_random = []
+    margins = {}
+    for name in all_apps():
+        exp = build_experiment(name)
+        m_rand = _analytical_margin(exp, "random", 6)
+        m_bbv = _analytical_margin(exp, "bbv", 6)
+        m_rfv = _analytical_margin(exp, "rfv", 6)
+        m_dg = _analytical_margin(exp, "dg", 6)
+        margins[name] = (m_rand, m_bbv, m_rfv, m_dg)
+        if m_bbv > m_rand:
+            worse_than_random.append(name)
+        _row(f"fig7_margin_{name}", round(m_rand, 1),
+             f"bbv={m_bbv:.1f};rfv={m_rfv:.1f};dg={m_dg:.1f}")
+    _row("fig7_bbv_worse_than_random", len(worse_than_random),
+         "apps (paper: ~5 of 10): " + "|".join(
+             w.split(".")[1] for w in worse_than_random))
+    rfv_ok = sum(1 for m in margins.values() if m[2] < 12.0)
+    _row("fig7_rfv_margin_lt12pct", rfv_ok, "apps (paper: most <10%)")
+    _row("fig7_time_s", round(time.time() - t0, 1))
+    return {"bbv_worse": len(worse_than_random), "margins": margins}
+
+
+# ---------------------------------------------------------------------- Fig 8
+def bench_ci_empirical(trials: int = 1000) -> dict:
+    """Fig 8: Monte-Carlo 95th-percentile |error| at n=20 per scheme."""
+    t0 = time.time()
+    rng = np.random.default_rng(7)
+    results = {}
+    for name in all_apps():
+        exp = build_experiment(name)
+        cpi6_census = exp.census(6)
+        cpi6_p1 = exp.cpi(6, exp.idx1)
+        truth = exp.truth[6]
+        errs = {"random": [], "bbv": [], "rfv": [], "dg": []}
+        # vectorized random-sampling trials
+        draws = rng.choice(cpi6_census, size=(trials, 20))
+        errs["random"] = 100 * np.abs(draws.mean(1) - truth) / truth
+        for scheme, labels, weights, pool_cpi in (
+                ("bbv", exp.bbv_labels, exp.bbv_weights, cpi6_census),
+                ("rfv", exp.rfv_labels, exp.rfv_weights, cpi6_p1),
+                ("dg", exp.dg_labels, exp.dg_weights, cpi6_p1)):
+            per_stratum = [pool_cpi[labels == h] for h in range(NUM_STRATA)]
+            ests = np.zeros(trials)
+            for h, vals in enumerate(per_stratum):
+                if vals.size == 0:
+                    continue
+                pick = rng.integers(0, vals.size, trials)
+                ests += weights[h] * vals[pick]
+            errs[scheme] = 100 * np.abs(ests - truth) / truth
+        results[name] = {k: float(np.percentile(v, 95))
+                         for k, v in errs.items()}
+        r = results[name]
+        _row(f"fig8_p95err_{name}", round(r["random"], 1),
+             f"bbv={r['bbv']:.1f};rfv={r['rfv']:.1f};dg={r['dg']:.1f}")
+    _row("fig8_time_s", round(time.time() - t0, 1))
+    return results
+
+
+# ---------------------------------------------------------------------- Fig 9
+def bench_ci_collapsed() -> dict:
+    """Fig 9: practically computable CI — collapsed strata from exactly 20
+    simulations of config 6 (one per RFV stratum, random unit)."""
+    t0 = time.time()
+    out = {}
+    for name in all_apps():
+        exp = build_experiment(name)
+        sel, weights = scheme_selection(exp, "rfv", "random", seed=3)
+        y = np.array([float(exp.cpi(6, s)[0]) for s in sel if s.size])
+        w = np.array([weights[h] for h, s in enumerate(sel) if s.size])
+        w = w / w.sum()
+        order = np.array([exp.cpi0_1[exp.rfv_labels == h].mean()
+                          for h, s in enumerate(sel) if s.size])
+        est = collapsed_strata_estimate(y, w, order_by=order)
+        covered = est.covers(exp.truth[6])
+        out[name] = (est.margin_pct, covered)
+        _row(f"fig9_collapsed_margin_{name}", round(est.margin_pct, 1),
+             f"covers_truth={covered}")
+    cov = sum(1 for _, c in out.values() if c)
+    _row("fig9_coverage", cov, "of 10 apps (95% CI; collapsed strata are "
+                               "approximate)")
+    _row("fig9_time_s", round(time.time() - t0, 1))
+    return out
+
+
+# --------------------------------------------------------------------- Fig 10
+def bench_selection_centroid() -> dict:
+    """Fig 10: measured errors (Configs 0-6) with centroid selection."""
+    t0 = time.time()
+    out = {}
+    for name in all_apps():
+        exp = build_experiment(name)
+        maxerr = {}
+        for scheme in ("bbv", "rfv", "dg"):
+            sel, weights = scheme_selection(exp, scheme, "centroid")
+            flat = np.concatenate([s for s in sel if s.size])
+            errs = []
+            for cfg_i in range(7):
+                cpi = exp.cpi(cfg_i, flat)
+                est = weighted_estimate(sel, cpi, weights)
+                errs.append(100 * abs(est - exp.truth[cfg_i]) /
+                            exp.truth[cfg_i])
+            maxerr[scheme] = max(errs)
+        out[name] = maxerr
+        _row(f"fig10_maxerr_{name}", round(maxerr["bbv"], 1),
+             f"rfv={maxerr['rfv']:.1f};dg={maxerr['dg']:.1f}")
+    worst_bbv = max(v["bbv"] for v in out.values())
+    worst_rfv = max(v["rfv"] for v in out.values())
+    _row("fig10_worst_bbv_err", round(worst_bbv, 1),
+         "paper: 40-60% for two apps")
+    _row("fig10_worst_rfv_err", round(worst_rfv, 1), "paper: ~3%")
+    _row("fig10_time_s", round(time.time() - t0, 1))
+    return {"worst_bbv": worst_bbv, "worst_rfv": worst_rfv, "per_app": out}
+
+
+# --------------------------------------------------------------------- Fig 11
+def bench_selection_mean() -> dict:
+    """Fig 11: mean selection (baseline-CPI nearest stratum mean)."""
+    t0 = time.time()
+    out = {}
+    for name in all_apps():
+        exp = build_experiment(name)
+        maxerr = {}
+        for scheme in ("bbv", "rfv", "dg"):
+            sel, weights = scheme_selection(exp, scheme, "mean")
+            flat = np.concatenate([s for s in sel if s.size])
+            errs = []
+            for cfg_i in range(7):
+                cpi = exp.cpi(cfg_i, flat)
+                est = weighted_estimate(sel, cpi, weights)
+                errs.append(100 * abs(est - exp.truth[cfg_i]) /
+                            exp.truth[cfg_i])
+            maxerr[scheme] = max(errs)
+        out[name] = maxerr
+        _row(f"fig11_maxerr_{name}", round(maxerr["bbv"], 1),
+             f"rfv={maxerr['rfv']:.1f};dg={maxerr['dg']:.1f}")
+    worst_bbv = max(v["bbv"] for v in out.values())
+    _row("fig11_worst_bbv_err", round(worst_bbv, 1),
+         "paper: BBV improved vs Fig 10, still worse than RFV")
+    _row("fig11_time_s", round(time.time() - t0, 1))
+    return {"worst_bbv_mean": worst_bbv, "per_app": out}
+
+
+# ------------------------------------------------------------------ Fig 12/13
+def bench_distribution_approx() -> dict:
+    """Fig 12/13: distribution approximated by 20 vs 500 selected regions —
+    Kolmogorov-Smirnov distance to the census CPI distribution."""
+    from repro.core.clustering import kmeans
+    from repro.core.sampling import select_centroid
+    t0 = time.time()
+    out = {}
+    for name in all_apps():
+        exp = build_experiment(name)
+        census = np.sort(exp.census(0))
+        ks = {}
+        for k in (20, 500):
+            if k == 20:
+                sel, weights = scheme_selection(exp, "rfv", "centroid")
+            else:
+                km = kmeans(exp.rfv_z, min(k, exp.idx1.size // 2), seed=0)
+                w = np.bincount(km.labels,
+                                minlength=km.centroids.shape[0]).astype(float)
+                w /= w.sum()
+                local = select_centroid(km.labels, exp.rfv_z, km.centroids)
+                sel, weights = [exp.idx1[l] for l in local], w
+            vals, ws = [], []
+            for h, s in enumerate(sel):
+                if s.size:
+                    vals.append(float(exp.cpi(0, s)[0]))
+                    ws.append(weights[h])
+            vals = np.asarray(vals)
+            ws = np.asarray(ws) / np.sum(ws)
+            order = np.argsort(vals)
+            vals, ws = vals[order], ws[order]
+            approx_cdf_at = np.cumsum(ws)
+            census_cdf = np.searchsorted(census, vals, side="right") \
+                / census.size
+            ks[k] = float(np.max(np.abs(approx_cdf_at - census_cdf)))
+        out[name] = ks
+        _row(f"fig12_ks20_{name}", round(ks[20], 3),
+             f"ks500={ks[500]:.3f}")
+    improved = sum(1 for v in out.values() if v[500] <= v[20] + 1e-9)
+    _row("fig13_ks_improved_at_500", improved, "of 10 apps")
+    _row("fig12_time_s", round(time.time() - t0, 1))
+    return out
+
+
+# -------------------------------------------------------------------- Table IV
+def bench_two_phase_sizing() -> dict:
+    """Table IV: phase-2 sizes for <=1.5x the phase-1 random margin, RFV vs
+    BBV stratification; derived reduction factors vs simple random."""
+    t0 = time.time()
+    tot_rand = tot_rfv = tot_bbv = 0
+    rows = {}
+    for name in all_apps():
+        exp = build_experiment(name)
+        cpi6_p1 = exp.cpi(6, exp.idx1)
+        n1 = exp.idx1.size
+        est1 = srs_estimate(cpi6_p1)
+        target_abs = 1.5 * est1.margin / 1.959964  # margin -> sigma units
+        # within-stratum stds + between-var for eq.(6)
+        sizes = {}
+        for scheme, labels, weights in (
+                ("rfv", exp.rfv_labels, exp.rfv_weights),
+                ("bbv_p1", None, None)):
+            if scheme == "bbv_p1":
+                # classify phase-1 units into census BBV strata
+                labels = exp.bbv_labels[exp.idx1]
+                weights = exp.bbv_weights
+            stds = np.array([cpi6_p1[labels == h].std(ddof=1)
+                             if (labels == h).sum() > 1 else 0.0
+                             for h in range(NUM_STRATA)])
+            mean = float(np.sum(weights * np.array(
+                [cpi6_p1[labels == h].mean() if (labels == h).any() else 0.0
+                 for h in range(NUM_STRATA)])))
+            between = float(np.sum(weights * (np.array(
+                [cpi6_p1[labels == h].mean() if (labels == h).any() else mean
+                 for h in range(NUM_STRATA)]) - mean) ** 2))
+            try:
+                n_h = phase2_sizes_for_margin(
+                    weights, stds, n1, between,
+                    target_margin_abs=1.5 * est1.margin,
+                    allocation="neyman")
+                sizes[scheme] = int(n_h.sum())
+            except ValueError:
+                sizes[scheme] = n1  # unattainable: fall back to full SRS
+        rows[name] = (n1, sizes["rfv"], sizes["bbv_p1"])
+        tot_rand += n1
+        tot_rfv += sizes["rfv"]
+        tot_bbv += sizes["bbv_p1"]
+        _row(f"table4_{name}", n1,
+             f"rfv={sizes['rfv']};bbv={sizes['bbv_p1']};"
+             f"margin_random_pct={est1.margin_pct:.2f}")
+    red_rfv = tot_rand / max(tot_rfv, 1)
+    red_bbv = tot_rand / max(tot_bbv, 1)
+    _row("table4_total_random", tot_rand, "paper: 24079")
+    _row("table4_total_rfv", tot_rfv,
+         f"reduction={red_rfv:.1f}x (paper: 12.6x, 1917 sims)")
+    _row("table4_total_bbv", tot_bbv,
+         f"reduction={red_bbv:.1f}x (paper: 3.5x, 6818 sims)")
+    _row("table4_time_s", round(time.time() - t0, 1))
+    return {"reduction_rfv": red_rfv, "reduction_bbv": red_bbv,
+            "per_app": rows}
+
+
+# ------------------------------------------------- gcc k-sensitivity (V.B.1)
+def bench_gcc_cluster_sensitivity() -> dict:
+    """Paper V.B.1: raising gcc's BBV clusters 20 -> 50 collapses the
+    centroid-selection error (our dominant-phase mechanism reproduces it)."""
+    import jax as _jax
+
+    from repro.core.clustering import kmeans as _kmeans, random_project
+    from repro.core.sampling import select_centroid
+    from repro.simcpu import get_bbvs
+    t0 = time.time()
+    exp = build_experiment("502.gcc_r")
+    pop = get_population("502.gcc_r")
+    z = exp.bbv_feats
+    out = {}
+    for k in (20, 50):
+        km = _kmeans(z, k, seed=0)
+        w = np.bincount(km.labels, minlength=k) / z.shape[0]
+        sel = select_centroid(km.labels, z, km.centroids)
+        errs = []
+        for cfg_i in range(7):
+            est = sum(w[h] * float(exp.cpi(cfg_i, sel[h])[0])
+                      for h in range(k) if sel[h].size)
+            errs.append(100 * abs(est - exp.truth[cfg_i]) /
+                        exp.truth[cfg_i])
+        out[k] = max(errs)
+        _row(f"gcc_bbv_maxerr_k{k}", round(out[k], 1),
+             "paper: k=50 -> 5.4%")
+    _row("gcc_sensitivity_time_s", round(time.time() - t0, 1))
+    return out
+
+
+# ------------------------------------------ beyond-paper: §VI.C directions
+def bench_approx_phase1() -> dict:
+    """Paper §VI.C (proposed, not evaluated): run phase 1 on a FAST
+    approximate simulator, stratify on its (biased) RFV, then study
+    accurate configurations on the selected regions. The phase-1 cost drops
+    ~6x (model-term count); the question is how much selection quality
+    degrades vs accurate-RFV stratification."""
+    import numpy as np
+
+    from repro.core.clustering import Standardizer, kmeans
+    from repro.core.sampling import select_centroid
+    from repro.simcpu.perfmodel import evaluate_regions_approx
+    t0 = time.time()
+    worst = {}
+    for name in all_apps():
+        exp = build_experiment(name)
+        pop = exp.sim.pop
+        # approximate RFV on the same phase-1 sample
+        stats = evaluate_regions_approx(pop.features, CONFIGS[0], exp.idx1)
+        feats = np.stack([stats[k] for k in sorted(stats)], axis=1)
+        _, z = Standardizer.fit_transform(feats)
+        z = np.asarray(z)
+        km = kmeans(z, NUM_STRATA, seed=0, restarts=2)
+        w = np.bincount(km.labels, minlength=NUM_STRATA) / exp.idx1.size
+        sel = [exp.idx1[s] for s in
+               select_centroid(km.labels, z, km.centroids)]
+        errs = []
+        for cfg_i in range(7):
+            est = sum(w[h] * float(exp.cpi(cfg_i, sel[h])[0])
+                      for h in range(NUM_STRATA) if sel[h].size)
+            errs.append(100 * abs(est - exp.truth[cfg_i]) /
+                        exp.truth[cfg_i])
+        worst[name] = max(errs)
+        _row(f"approx_phase1_maxerr_{name}", round(worst[name], 1))
+    _row("approx_phase1_worst", round(max(worst.values()), 1),
+         "approximate-simulator phase 1 (beyond-paper, paper proposes in "
+         "VI.C)")
+    _row("approx_phase1_time_s", round(time.time() - t0, 1))
+    return {"worst": max(worst.values()), "per_app": worst}
+
+
+def bench_isa_features() -> dict:
+    """Paper §VI.C: stratify on microarchitecture-INDEPENDENT (ISA-level)
+    features. Our populations' intrinsic feature vectors (ILP, branch/miss
+    potentials, working-set sensitivities) are exactly such features —
+    available without any cycle-accurate run."""
+    import numpy as np
+
+    from repro.core.clustering import Standardizer, kmeans
+    from repro.core.sampling import select_centroid
+    t0 = time.time()
+    worst = {}
+    for name in all_apps():
+        exp = build_experiment(name)
+        pop = exp.sim.pop
+        feats = pop.features[exp.idx1]
+        _, z = Standardizer.fit_transform(feats)
+        z = np.asarray(z)
+        km = kmeans(z, NUM_STRATA, seed=0, restarts=2)
+        w = np.bincount(km.labels, minlength=NUM_STRATA) / exp.idx1.size
+        sel = [exp.idx1[s] for s in
+               select_centroid(km.labels, z, km.centroids)]
+        errs = []
+        for cfg_i in range(7):
+            est = sum(w[h] * float(exp.cpi(cfg_i, sel[h])[0])
+                      for h in range(NUM_STRATA) if sel[h].size)
+            errs.append(100 * abs(est - exp.truth[cfg_i]) /
+                        exp.truth[cfg_i])
+        worst[name] = max(errs)
+        _row(f"isa_features_maxerr_{name}", round(worst[name], 1))
+    _row("isa_features_worst", round(max(worst.values()), 1),
+         "ISA-level stratification (beyond-paper, paper proposes in VI.C)")
+    _row("isa_features_time_s", round(time.time() - t0, 1))
+    return {"worst": max(worst.values()), "per_app": worst}

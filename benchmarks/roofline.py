@@ -1,0 +1,130 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) single-pod cell, from the trip-count-weighted HLO costs
+(see repro/launch/hlo_analysis.py — XLA's cost_analysis() counts loop
+bodies once):
+
+    compute    = weighted_HLO_FLOPs(per device) / peak_FLOPs
+    memory     = weighted_HLO_bytes(per device) / HBM_bw
+    collective = weighted_wire_bytes(per device) / ICI_bw
+
+"Useful" work per device:
+    train/prefill: MODEL_FLOPS/device at peak        (compute-normalized)
+    decode:        minimum stream bytes (params + caches, read once) / HBM
+                   (decode is memory-bound by construction)
+
+roofline_fraction = useful_time / max(term) — the fraction of the
+achievable bound spent on useful work; the score the perf loop drives up.
+
+Hardware: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = Path("results/dryrun")
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("ok"):
+            cells.append(rec)
+    return cells
+
+
+def _min_decode_bytes(rec: dict) -> float:
+    """Per-device lower bound on decode-step HBM traffic: every live
+    parameter byte + cache byte must stream once."""
+    from repro.configs import get_config
+    from repro.configs.base import SHAPE_BY_NAME
+    from repro.models.common import ModelConfig  # noqa: F401
+    cfg = get_config(rec["arch"])
+    cell = SHAPE_BY_NAME[rec["shape"]]
+    n_dev = 1
+    for s in rec["mesh_shape"]:
+        n_dev *= s
+    param_bytes = cfg.active_param_count() * 2          # bf16
+    if cfg.family in ("ssm", "hybrid"):
+        cache = cfg.n_layers * cell.global_batch * cfg.d_model * 64 * 4
+        if cfg.family == "hybrid":
+            win = min(cfg.window or cell.seq_len, cell.seq_len)
+            cache = (cfg.n_layers // 3) * cell.global_batch * \
+                cfg.n_kv_heads * win * cfg.head_dim * 2 * 2
+    else:
+        cache = cfg.n_layers * cell.global_batch * cfg.n_kv_heads * \
+            cell.seq_len * cfg.head_dim * 2 * 2
+    return (param_bytes + cache) / n_dev
+
+
+def roofline_terms(rec: dict) -> dict:
+    cw = rec.get("cost_weighted") or {
+        "flops": rec["cost"]["flops"], "bytes": rec["cost"]["bytes_accessed"]}
+    flops = cw["flops"]
+    bytes_acc = cw["bytes"]
+    wire = rec["collectives"]["total_wire_bytes"]
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_acc / HBM_BW
+    t_coll = wire / ICI_BW
+    dominant = max((t_comp, "compute"), (t_mem, "memory"),
+                   (t_coll, "collective"))[1]
+    bound = max(t_comp, t_mem, t_coll, 1e-12)
+    n_dev = 1
+    for s in rec["mesh_shape"]:
+        n_dev *= s
+    model_flops_dev = rec["model_flops"] / n_dev
+    if rec["shape"].startswith(("decode", "long")):
+        useful_t = _min_decode_bytes(rec) / HBM_BW
+    else:
+        useful_t = model_flops_dev / PEAK_FLOPS
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll, "dominant": dominant, "bound_s": bound,
+        "model_flops_per_dev": model_flops_dev,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": min(model_flops_dev / flops, 1.0) if flops else 0.0,
+        "roofline_fraction": min(useful_t / bound, 1.0),
+    }
+
+
+def main() -> None:
+    cells = load_cells("single")
+    if not cells:
+        print("roofline,0,no dry-run artifacts found (run repro.launch.dryrun)")
+        return
+    print("arch,shape,t_compute_ms,t_memory_ms,t_collective_ms,dominant,"
+          "useful_ratio,roofline_fraction")
+    rows = []
+    for rec in cells:
+        r = roofline_terms(rec)
+        rows.append(r)
+        print(f"{r['arch']},{r['shape']},{r['t_compute_s']*1e3:.2f},"
+              f"{r['t_memory_s']*1e3:.2f},{r['t_collective_s']*1e3:.2f},"
+              f"{r['dominant']},{r['useful_ratio']:.3f},"
+              f"{r['roofline_fraction']:.3f}")
+    Path("results").mkdir(exist_ok=True)
+    Path("results/roofline.json").write_text(json.dumps(rows, indent=1))
+    train_rows = [r for r in rows if r["shape"].startswith(
+        ("train", "prefill"))]
+    worst = min(train_rows, key=lambda r: r["roofline_fraction"])
+    coll = max(rows, key=lambda r: r["t_collective_s"] /
+               max(r["bound_s"], 1e-12))
+    best = max(train_rows, key=lambda r: r["roofline_fraction"])
+    print(f"roofline_worst_train_cell,{worst['arch']}|{worst['shape']},"
+          f"fraction={worst['roofline_fraction']:.3f}")
+    print(f"roofline_best_train_cell,{best['arch']}|{best['shape']},"
+          f"fraction={best['roofline_fraction']:.3f}")
+    print(f"roofline_most_collective,{coll['arch']}|{coll['shape']},"
+          f"t_coll_ms={coll['t_collective_s']*1e3:.2f}")
+
+
+if __name__ == "__main__":
+    main()

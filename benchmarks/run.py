@@ -1,0 +1,103 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV and a final claim-validation summary.
+``--quick`` trims Monte-Carlo trial counts (CI smoke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+
+    from . import kernels_bench, paper_figs
+
+    benches = {
+        "fig1_cpi_distributions": paper_figs.bench_cpi_distributions,
+        "fig5_config_sweep": paper_figs.bench_config_sweep,
+        "fig7_ci_analytical": paper_figs.bench_ci_analytical,
+        "fig8_ci_empirical": (lambda: paper_figs.bench_ci_empirical(
+            trials=100 if args.quick else 1000)),
+        "fig9_ci_collapsed": paper_figs.bench_ci_collapsed,
+        "fig10_selection_centroid": paper_figs.bench_selection_centroid,
+        "fig11_selection_mean": paper_figs.bench_selection_mean,
+        "fig12_13_distribution_approx": paper_figs.bench_distribution_approx,
+        "table4_two_phase_sizing": paper_figs.bench_two_phase_sizing,
+        "gcc_cluster_sensitivity": paper_figs.bench_gcc_cluster_sensitivity,
+        "beyond_approx_phase1": paper_figs.bench_approx_phase1,
+        "beyond_isa_features": paper_figs.bench_isa_features,
+        "kernels": kernels_bench.bench_kernels,
+    }
+    if args.only:
+        names = args.only.split(",")
+        benches = {k: v for k, v in benches.items() if k in names}
+
+    t0 = time.time()
+    results = {}
+    for name, fn in benches.items():
+        print(f"# === {name} ===", flush=True)
+        try:
+            results[name] = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            results[name] = None
+
+    # ------------------------------------------------ claim validation
+    print("# === claim validation (paper vs reproduction) ===")
+    ok = True
+
+    def check(name, cond, detail):
+        nonlocal ok
+        print(f"claim_{name},{'PASS' if cond else 'FAIL'},{detail}")
+        ok = ok and cond
+
+    r5 = results.get("fig5_config_sweep")
+    if r5:
+        check("geomean_speedup", 1.5 <= r5["speedup"] <= 1.9,
+              f"cfg6/cfg0 {r5['speedup']:.2f} vs paper 1.68")
+    r10 = results.get("fig10_selection_centroid")
+    if r10:
+        check("simpoint20_large_error", r10["worst_bbv"] >= 20.0,
+              f"worst BBV centroid err {r10['worst_bbv']:.1f}% "
+              "(paper: 40-60% for two apps)")
+        check("two_phase_rfv_low_error", r10["worst_rfv"] <= 8.0,
+              f"worst RFV err {r10['worst_rfv']:.1f}% (paper: ~3%)")
+    r7 = results.get("fig7_ci_analytical")
+    if r7:
+        # qualitative phenomenon: BBV-stratified CIs CAN be worse than SRS
+        # (paper: 5 of 10 apps; ours: the dominant-phase apps — see
+        # EXPERIMENTS.md known deltas)
+        check("bbv_worse_than_random", r7["bbv_worse"] >= 2,
+              f"{r7['bbv_worse']} apps (paper: ~5)")
+    rt = results.get("table4_two_phase_sizing")
+    if rt:
+        check("order_of_magnitude_reduction",
+              rt["reduction_rfv"] >= 5.0,
+              f"RFV phase-2 reduction {rt['reduction_rfv']:.1f}x "
+              "(paper: 12.6x)")
+        check("rfv_beats_bbv_sizing",
+              rt["reduction_rfv"] > rt["reduction_bbv"],
+              f"rfv {rt['reduction_rfv']:.1f}x vs bbv "
+              f"{rt['reduction_bbv']:.1f}x (paper: 12.6 vs 3.5)")
+    rg = results.get("gcc_cluster_sensitivity")
+    if rg:
+        check("gcc_k50_fixes_bbv", rg.get(50, 99) < rg.get(20, 0),
+              f"k=20: {rg.get(20, 0):.1f}% -> k=50: {rg.get(50, 99):.1f}% "
+              "(paper: 5.4% at k=50)")
+
+    print(f"benchmarks_total_s,{time.time()-t0:.1f},")
+    print(f"benchmarks_overall,{'PASS' if ok else 'FAIL'},")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

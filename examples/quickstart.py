@@ -1,0 +1,78 @@
+"""Quickstart: the paper's two-phase stratified sampling flow, end to end.
+
+Runs the recommended methodology (paper Fig. 14) on one synthetic SPECint
+application and prints every artifact: the phase-1 estimate, the strata,
+the 20-region day-to-day estimate, its error vs ground truth, and a
+collapsed-strata confidence interval computed from those same 20 runs.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.sampling import TwoPhaseFlow
+from repro.simcpu import CONFIGS, Ledger, make_simulator
+
+APP = "502.gcc_r"          # the paper's hardest application
+NUM_STRATA = 20
+
+
+def main() -> None:
+    ledger = Ledger()
+    sim = make_simulator(APP, ledger=ledger)
+    flow = TwoPhaseFlow(population_size=sim.pop.n_regions,
+                        rng=np.random.default_rng(0))
+
+    # Step 1 — initial characterization: large SRS on the baseline config.
+    idx1, cpi0, rfv, est1 = flow.characterize(
+        lambda idx: sim.simulate_rfv(idx, CONFIGS[0]),
+        n_phase1=sim.pop.spec.phase1_n)
+    print(f"[1] phase-1: n={idx1.size} regions,  "
+          f"CPI = {est1.mean:.3f} ± {est1.margin_pct:.2f}%  "
+          f"(true {sim.true_mean_cpi(CONFIGS[0]):.3f})")
+
+    # Steps 2+3 — stratify on RFVs, pick centroids.
+    strat = flow.stratify(idx1, cpi0, rfv, num_strata=NUM_STRATA,
+                          scheme="rfv")
+    selected = flow.select(strat, policy="centroid")
+    print(f"[2] stratified into {strat.num_strata} strata, "
+          f"weights {np.round(np.sort(strat.weights)[-3:], 3)} (top 3)")
+
+    # Step 3 self-check: estimate the baseline from the 20 regions.
+    est0 = flow.point_estimate(
+        strat, selected, lambda i: sim.simulate_cpi(i, CONFIGS[0]))
+    err0 = 100 * abs(est0 - sim.true_mean_cpi(CONFIGS[0])) \
+        / sim.true_mean_cpi(CONFIGS[0])
+    print(f"[3] 20-region estimate of baseline: {est0:.3f} "
+          f"(error {err0:.2f}% vs phase-1/census)")
+
+    # Step 4a — day-to-day study of a NEW configuration (Config 6).
+    before = ledger.regions_simulated
+    est6 = flow.point_estimate(
+        strat, selected, lambda i: sim.simulate_cpi(i, CONFIGS[6]))
+    cost = ledger.regions_simulated - before
+    true6 = sim.true_mean_cpi(CONFIGS[6])
+    print(f"[4a] Config-6 estimate from {cost} simulations: {est6:.3f} "
+          f"(true {true6:.3f}, error {100*abs(est6-true6)/true6:.2f}%)")
+
+    # ... with a practical CI from the same 20 runs (collapsed strata).
+    ci = flow.collapsed_ci(strat, selected,
+                           lambda i: sim.simulate_cpi(i, CONFIGS[6]))
+    print(f"     collapsed-strata 95% CI: ±{ci.margin_pct:.1f}%  "
+          f"covers truth: {ci.covers(true6)}")
+
+    # Step 4b — periodic multi-unit CI check (tight, ~10x cheaper than SRS).
+    before = ledger.regions_simulated
+    est_ci = flow.ci_check(strat,
+                           lambda i: sim.simulate_cpi(i, CONFIGS[6]),
+                           per_stratum_sizes=np.full(NUM_STRATA, 8))
+    cost = ledger.regions_simulated - before
+    print(f"[4b] CI-check from {cost} simulations: {est_ci.mean:.3f} "
+          f"± {est_ci.margin_pct:.2f}%  covers truth: "
+          f"{est_ci.covers(true6)}")
+    print(f"total simulation budget spent: {ledger.regions_simulated} "
+          f"regions ({ledger.instructions_simulated/1e9:.1f} B instructions)")
+
+
+if __name__ == "__main__":
+    main()

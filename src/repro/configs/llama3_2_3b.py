@@ -1,0 +1,21 @@
+"""llama3.2-3b — small llama3 [hf:meta-llama/Llama-3.2-1B].
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+"""
+
+from ..models.common import ModelConfig
+from .base import register, smoke_variant
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b", family="dense",
+        n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8,
+        d_ff=8192, vocab=128256)
+
+
+def smoke() -> ModelConfig:
+    return smoke_variant(full())
+
+
+register("llama3.2-3b", full, smoke)

@@ -1,0 +1,4 @@
+# The paper's primary contribution: two-phase stratified sampling for
+# simulation-region selection, with analytically sound confidence intervals.
+from . import clustering, sampling  # noqa: F401
+from .features import RFV_METRICS, build_rfv  # noqa: F401

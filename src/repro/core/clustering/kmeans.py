@@ -1,0 +1,175 @@
+"""k-means clustering in JAX (SimPoint's stratification step).
+
+Design notes
+------------
+* kmeans++ initialization, Lloyd iterations inside ``lax.while_loop`` —
+  the whole fit is one jitted computation.
+* Pluggable assignment backend: ``"jnp"`` (pure jnp, the oracle) or
+  ``"pallas"`` (the tiled TPU kernel in ``repro.kernels.kmeans_assign``,
+  run with interpret=True on CPU). Both produce identical assignments.
+* Empty clusters are re-seeded to the point farthest from its centroid —
+  standard practice; keeps L strata non-empty, which the stratified
+  estimators require.
+* The paper repeats clustering with 10 seeds for the stochastic schemes
+  (Fig 7); ``kmeans_multi_seed`` supports that and best-of-N selection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansResult:
+    centroids: np.ndarray   # (k, d)
+    labels: np.ndarray      # (n,)
+    inertia: float          # sum of squared distances to assigned centroid
+    iterations: int
+
+
+def _assign_jnp(x: jax.Array, centroids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid assignment. Returns (labels, min_dist2)."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)           # (n, 1)
+    c2 = jnp.sum(centroids * centroids, axis=1)          # (k,)
+    # dist2 = |x|^2 - 2 x.c^T + |c|^2 : the x.c^T matmul is the MXU hot spot.
+    d2 = x2 - 2.0 * (x @ centroids.T) + c2[None, :]
+    labels = jnp.argmin(d2, axis=1)
+    return labels, jnp.maximum(jnp.min(d2, axis=1), 0.0)
+
+
+def _assign_pallas(x: jax.Array, centroids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    from repro.kernels.kmeans_assign import ops as _ops
+    return _ops.kmeans_assign(x, centroids)
+
+
+_ASSIGN = {"jnp": _assign_jnp, "pallas": _assign_pallas}
+
+
+def _update_centroids(x: jax.Array, labels: jax.Array, k: int,
+                      old: jax.Array) -> jax.Array:
+    """Mean of assigned points; empty clusters keep their old centroid."""
+    sums = jax.ops.segment_sum(x, labels, num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype), labels,
+                                 num_segments=k)
+    safe = jnp.maximum(counts, 1.0)
+    means = sums / safe[:, None]
+    return jnp.where((counts > 0)[:, None], means, old)
+
+
+def _kmeanspp_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """kmeans++ seeding (jit-friendly, O(k) passes)."""
+    n = x.shape[0]
+
+    def body(carry, i):
+        key, centroids, min_d2 = carry
+        key, sub = jax.random.split(key)
+        probs = min_d2 / jnp.maximum(min_d2.sum(), 1e-30)
+        idx = jax.random.choice(sub, n, p=probs)
+        c_new = x[idx]
+        centroids = centroids.at[i].set(c_new)
+        d2_new = jnp.sum((x - c_new[None, :]) ** 2, axis=1)
+        return (key, centroids, jnp.minimum(min_d2, d2_new)), None
+
+    key, sub = jax.random.split(key)
+    first = x[jax.random.randint(sub, (), 0, n)]
+    centroids = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(first)
+    min_d2 = jnp.sum((x - first[None, :]) ** 2, axis=1)
+    (key, centroids, _), _ = jax.lax.scan(
+        body, (key, centroids, min_d2), jnp.arange(1, k))
+    return centroids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_iters", "backend", "tol"))
+def _kmeans_fit(key: jax.Array, x: jax.Array, k: int, max_iters: int,
+                backend: str, tol: float):
+    assign = _ASSIGN[backend]
+    init = _kmeanspp_init(key, x, k)
+
+    def cond(state):
+        _, _, it, shift = state
+        return jnp.logical_and(it < max_iters, shift > tol)
+
+    def body(state):
+        centroids, _, it, _ = state
+        labels, _ = assign(x, centroids)
+        new_c = _update_centroids(x, labels, k, centroids)
+        shift = jnp.max(jnp.sum((new_c - centroids) ** 2, axis=1))
+        return new_c, labels, it + 1, shift
+
+    labels0, _ = assign(x, init)
+    state = (init, labels0, jnp.asarray(0), jnp.asarray(jnp.inf, x.dtype))
+    centroids, labels, iters, _ = jax.lax.while_loop(cond, body, state)
+    labels, min_d2 = assign(x, centroids)
+    return centroids, labels, min_d2.sum(), iters
+
+
+def kmeans(
+    features,
+    k: int,
+    *,
+    key: Optional[jax.Array] = None,
+    seed: int = 0,
+    max_iters: int = 100,
+    backend: str = "jnp",
+    tol: float = 1e-8,
+    restarts: int = 1,
+) -> KMeansResult:
+    """Fit k-means; returns numpy-backed result (host-side strata labels).
+
+    ``restarts`` > 1 runs several kmeans++ initializations and keeps the
+    lowest-inertia fit (Lloyd can land in local minima even on perfectly
+    separated data).
+    """
+    x = jnp.asarray(features, dtype=jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"expected (n, d), got {x.shape}")
+    n = x.shape[0]
+    if k < 1 or k > n:
+        raise ValueError(f"k={k} invalid for n={n}")
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    best = None
+    for r in range(max(restarts, 1)):
+        # restarts=1 consumes the caller's key directly (stable results for
+        # seeded single-fit callers); multi-restart splits per attempt.
+        if restarts <= 1:
+            sub = key
+        else:
+            key, sub = jax.random.split(key)
+        centroids, labels, inertia, iters = _kmeans_fit(
+            sub, x, k, max_iters, backend, tol)
+        res = KMeansResult(
+            centroids=np.asarray(centroids),
+            labels=np.asarray(labels),
+            inertia=float(inertia),
+            iterations=int(iters),
+        )
+        if best is None or res.inertia < best.inertia:
+            best = res
+    return best
+
+
+def kmeans_multi_seed(
+    features,
+    k: int,
+    *,
+    seeds,
+    max_iters: int = 100,
+    backend: str = "jnp",
+) -> list[KMeansResult]:
+    """One fit per seed (the paper's 10-seed repetitions for Figs 7-8)."""
+    return [
+        kmeans(features, k, key=jax.random.PRNGKey(s), max_iters=max_iters,
+               backend=backend)
+        for s in seeds
+    ]
+
+
+def best_of(results: list[KMeansResult]) -> KMeansResult:
+    return min(results, key=lambda r: r.inertia)

@@ -1,0 +1,41 @@
+"""Feature standardization for RFV clustering (paper IV.B: "we did
+standardize the values")."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Standardizer:
+    """Column-wise z-score transform fitted on phase-1 data.
+
+    Constant columns get scale 1 so they map to 0 instead of NaN (several
+    Table III counters are exactly zero for some configs, e.g. prefetcher
+    stats when the prefetcher is disabled).
+    """
+
+    mean: np.ndarray
+    scale: np.ndarray
+
+    @staticmethod
+    def fit(features) -> "Standardizer":
+        arr = np.asarray(features, dtype=np.float64)
+        if arr.ndim != 2:
+            raise ValueError(f"expected (n, d) matrix, got {arr.shape}")
+        mean = arr.mean(axis=0)
+        std = arr.std(axis=0)
+        scale = np.where(std > 1e-12, std, 1.0)
+        return Standardizer(mean=mean, scale=scale)
+
+    def transform(self, features):
+        arr = jnp.asarray(features)
+        return (arr - self.mean.astype(arr.dtype)) / self.scale.astype(arr.dtype)
+
+    @staticmethod
+    def fit_transform(features) -> tuple["Standardizer", jnp.ndarray]:
+        st = Standardizer.fit(features)
+        return st, st.transform(features)

@@ -1,0 +1,32 @@
+"""Sampling estimators and designs (paper Appendix A + Fig. 14 flow)."""
+
+from .allocation import (neyman_allocation, proportional_allocation,
+                         required_total_neyman, required_total_proportional)
+from .collapsed import collapsed_strata_estimate
+from .dalenius import dalenius_gurney_strata, stratum_products
+from .design import Stratification, TwoPhaseFlow
+from .selection import (select_centroid, select_mean, select_random,
+                        weighted_point_estimate)
+from .srs import draw_srs, srs_estimate, srs_required_n
+from .stratified import (StratumSummary, satterthwaite_df,
+                         stratified_estimate,
+                         stratified_estimate_from_samples, stratified_mean,
+                         stratified_variance, summarize_strata)
+from .two_phase import phase2_sizes_for_margin, two_phase_estimate
+from .types import Estimate, critical_value
+
+__all__ = [
+    "Estimate", "critical_value", "StratumSummary",
+    "srs_estimate", "srs_required_n", "draw_srs",
+    "summarize_strata", "stratified_mean", "stratified_variance",
+    "stratified_estimate", "stratified_estimate_from_samples",
+    "satterthwaite_df",
+    "collapsed_strata_estimate",
+    "two_phase_estimate", "phase2_sizes_for_margin",
+    "dalenius_gurney_strata", "stratum_products",
+    "proportional_allocation", "neyman_allocation",
+    "required_total_neyman", "required_total_proportional",
+    "select_random", "select_centroid", "select_mean",
+    "weighted_point_estimate",
+    "TwoPhaseFlow", "Stratification",
+]

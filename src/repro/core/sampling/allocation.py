@@ -1,0 +1,95 @@
+"""Sample allocation across strata (Cochran Ch. 5.5-5.9).
+
+Used by the Table IV experiment: given target precision, how many phase-2
+units per stratum are needed under proportional or Neyman allocation.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .types import critical_value
+
+
+def proportional_allocation(weights: Sequence[float], n_total: int) -> np.ndarray:
+    """n_h proportional to W_h, each stratum >= 2 (so s_h^2 is estimable)."""
+    w = np.asarray(weights, dtype=np.float64)
+    raw = w * n_total
+    n_h = np.maximum(np.floor(raw).astype(int), 2)
+    return _largest_remainder_fixup(n_h, raw, n_total)
+
+
+def neyman_allocation(
+    weights: Sequence[float],
+    stds: Sequence[float],
+    n_total: int,
+    *,
+    min_per_stratum: int = 2,
+) -> np.ndarray:
+    """n_h proportional to W_h * S_h (optimal for fixed total n)."""
+    w = np.asarray(weights, dtype=np.float64)
+    s = np.asarray(stds, dtype=np.float64)
+    prod = w * np.maximum(s, 0.0)
+    if prod.sum() == 0.0:
+        return proportional_allocation(weights, n_total)
+    raw = prod / prod.sum() * n_total
+    n_h = np.maximum(np.floor(raw).astype(int), min_per_stratum)
+    return _largest_remainder_fixup(n_h, raw, n_total)
+
+
+def _largest_remainder_fixup(n_h: np.ndarray, raw: np.ndarray, n_total: int) -> np.ndarray:
+    """Adjust rounded allocation so sum(n_h) == max(n_total, minima sum)."""
+    n_h = n_h.copy()
+    deficit = n_total - int(n_h.sum())
+    if deficit > 0:
+        order = np.argsort(-(raw - np.floor(raw)))
+        for i in range(deficit):
+            n_h[order[i % len(order)]] += 1
+    # If minima pushed us above n_total we accept the overshoot: correctness
+    # (estimable variances) beats hitting the budget exactly.
+    return n_h
+
+
+def required_total_neyman(
+    weights: Sequence[float],
+    stds: Sequence[float],
+    *,
+    target_margin_abs: float,
+    confidence: float = 0.95,
+) -> int:
+    """Total phase-2 n under Neyman allocation for a target absolute margin.
+
+    From v(ybar) = (sum W_h S_h)^2 / n under Neyman allocation (no fpc):
+        n = z^2 (sum W_h S_h)^2 / margin^2
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    s = np.asarray(stds, dtype=np.float64)
+    z = critical_value(confidence, None)
+    numer = (w * s).sum() ** 2
+    if target_margin_abs <= 0:
+        raise ValueError("target margin must be positive")
+    n = int(np.ceil(z * z * numer / (target_margin_abs ** 2)))
+    return max(n, 2)
+
+
+def required_total_proportional(
+    weights: Sequence[float],
+    stds: Sequence[float],
+    *,
+    target_margin_abs: float,
+    confidence: float = 0.95,
+) -> int:
+    """Total phase-2 n under proportional allocation for a target margin.
+
+    v(ybar) = sum W_h S_h^2 / n  =>  n = z^2 sum(W_h S_h^2) / margin^2.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    s = np.asarray(stds, dtype=np.float64)
+    z = critical_value(confidence, None)
+    numer = (w * s * s).sum()
+    if target_margin_abs <= 0:
+        raise ValueError("target margin must be positive")
+    n = int(np.ceil(z * z * numer / (target_margin_abs ** 2)))
+    return max(n, 2)

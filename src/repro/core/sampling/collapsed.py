@@ -1,0 +1,89 @@
+"""Collapsed-strata variance estimation (Appendix A, Section C).
+
+With one sampling unit per stratum the within-stratum variance cannot be
+estimated directly. The method of collapsed strata (Cochran Sec. 5A.12)
+pairs strata expected to be similar and uses (paper eq. 4):
+
+    s_h^2 = s_{h+1}^2 = (y_h - y_{h+1})^2 / 4,   n_h = n_{h+1} = 1
+
+Pairs are formed from *neighboring* strata after ordering by an auxiliary
+value (the paper orders by Config-0 stratum CPI). Degrees of freedom:
+df = L - J with J collapsed groups ([18]); pairwise collapsing gives L/2.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .types import Estimate
+
+
+def collapsed_strata_estimate(
+    y_per_stratum: Sequence[float],
+    weights: Sequence[float],
+    *,
+    order_by: Optional[Sequence[float]] = None,
+    confidence: float = 0.95,
+) -> Estimate:
+    """CI for a one-unit-per-stratum design via pairwise collapsed strata.
+
+    ``y_per_stratum[h]``: the single sampled value from stratum h.
+    ``weights[h]``: W_h.
+    ``order_by``: auxiliary per-stratum values used to sort strata before
+      pairing neighbours (e.g. baseline-config stratum mean CPI). Defaults
+      to the sampled values themselves.
+
+    Variance uses the standard collapsed-strata estimator
+        v(ybar) = sum_pairs (W_g1 y_g1 - W_g2 y_g2 ... ) — we use the
+    Cochran form with per-unit variances from eq. (4) plugged into the
+    stratified formula: v = sum_h W_h^2 s_h^2 / 1.
+    With an odd number of strata the last *three* strata form one group and
+    the group variance is the sample variance of its members.
+    """
+    y = np.asarray(y_per_stratum, dtype=np.float64)
+    w = np.asarray(weights, dtype=np.float64)
+    if y.shape != w.shape:
+        raise ValueError("y and weights must align")
+    L = y.shape[0]
+    if L < 2:
+        raise ValueError("need at least two strata to collapse")
+    if not np.isclose(w.sum(), 1.0, atol=1e-6):
+        raise ValueError(f"weights sum to {w.sum()}, expected 1")
+
+    key = np.asarray(order_by, dtype=np.float64) if order_by is not None else y
+    if key.shape[0] != L:
+        raise ValueError("order_by must have one value per stratum")
+    order = np.argsort(key, kind="stable")
+
+    mean = float((w * y).sum())
+
+    # Group neighbouring strata pairwise; odd L puts the final stratum into
+    # the last group (a 3-stratum group).
+    groups: list[np.ndarray] = []
+    i = 0
+    while i + 1 < L:
+        if i + 3 == L:  # final group of three
+            groups.append(order[i:i + 3])
+            i += 3
+        else:
+            groups.append(order[i:i + 2])
+            i += 2
+
+    var = 0.0
+    for g in groups:
+        if len(g) == 2:
+            h1, h2 = g
+            s2 = (y[h1] - y[h2]) ** 2 / 4.0   # eq. (4)
+            var += (w[h1] ** 2) * s2 + (w[h2] ** 2) * s2
+        else:
+            vals = y[g]
+            s2 = float(vals.var(ddof=1))
+            for h in g:
+                var += (w[h] ** 2) * s2
+
+    J = len(groups)
+    df = float(max(L - J, 1))   # [18]; pairwise collapsing => df = L/2
+    return Estimate(mean=mean, variance=var, n=L, df=df,
+                    confidence=confidence, scheme="collapsed_strata")

@@ -1,0 +1,206 @@
+"""End-to-end two-phase sampling flow (paper Fig. 14, Section VI.A).
+
+Steps:
+  1. Initial characterization — large SRS on the baseline configuration.
+  2. Construct RFVs (and CPI distributions) from the phase-1 runs.
+  3. Stratify via k-means on RFVs; pick one region per stratum (centroid).
+  4. Day-to-day studies use the selected regions (4a); periodic CI checks
+     sample multiple units per stratum and apply the two-phase formulas (4b).
+
+The flow is substrate-agnostic: the caller supplies a ``measure`` callable
+(indices -> per-region study values) so the same driver runs the simcpu
+population, an LM sampled-eval corpus, or a step-profiling stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..clustering.kmeans import KMeansResult, kmeans
+from ..clustering.standardize import Standardizer
+from .collapsed import collapsed_strata_estimate
+from .selection import (select_centroid, select_mean, select_random,
+                        weighted_point_estimate)
+from .srs import draw_srs, srs_estimate
+from .stratified import summarize_strata
+from .two_phase import two_phase_estimate
+from .types import Estimate
+
+
+@dataclasses.dataclass
+class Stratification:
+    """Frozen phase-1 artifact reused across configuration studies."""
+
+    labels: np.ndarray            # per phase-1 unit
+    weights: np.ndarray           # W_h estimated from phase-1 proportions
+    centroids: Optional[np.ndarray]
+    features: Optional[np.ndarray]   # standardized features used to cluster
+    phase1_indices: np.ndarray    # population indices of phase-1 units
+    phase1_baseline_y: np.ndarray  # baseline-config y for phase-1 units
+    scheme: str
+
+    @property
+    def num_strata(self) -> int:
+        return int(self.weights.shape[0])
+
+    def stratum_order_key(self) -> np.ndarray:
+        """Per-stratum baseline mean CPI — the paper's collapsed-strata
+        pairing key ("ordering the strata based on CPI for Config 0")."""
+        out = np.zeros(self.num_strata)
+        for h in range(self.num_strata):
+            m = self.labels == h
+            out[h] = self.phase1_baseline_y[m].mean() if m.any() else np.inf
+        return out
+
+
+@dataclasses.dataclass
+class TwoPhaseFlow:
+    """Driver for the recommended methodology.
+
+    ``population_size``: number of regions in the application.
+    ``measure_baseline``: indices -> (y_baseline, feature_matrix). The
+      feature matrix is the RFV (or BBV) per region.
+    """
+
+    population_size: int
+    rng: np.random.Generator
+
+    # -- Step 1: initial characterization ------------------------------------
+    def characterize(
+        self,
+        measure_baseline: Callable[[np.ndarray], tuple[np.ndarray, np.ndarray]],
+        n_phase1: int,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, Estimate]:
+        idx = draw_srs(self.rng, self.population_size, n_phase1)
+        y0, feats = measure_baseline(idx)
+        est = srs_estimate(y0)
+        return idx, np.asarray(y0), np.asarray(feats), est
+
+    # -- Step 3: stratify + select -------------------------------------------
+    def stratify(
+        self,
+        phase1_indices: np.ndarray,
+        phase1_baseline_y: np.ndarray,
+        features: Optional[np.ndarray],
+        *,
+        num_strata: int,
+        scheme: str = "rfv",
+        seed: int = 0,
+        kmeans_backend: str = "jnp",
+    ) -> Stratification:
+        """scheme: 'rfv' | 'bbv' (k-means on features) or 'cpi'
+        (Dalenius-Gurney on baseline y)."""
+        if scheme in ("rfv", "bbv"):
+            if features is None:
+                raise ValueError(f"scheme {scheme!r} needs a feature matrix")
+            std, z = Standardizer.fit_transform(features)
+            z = np.asarray(z)
+            km: KMeansResult = kmeans(z, num_strata,
+                                      key=jax.random.PRNGKey(seed),
+                                      backend=kmeans_backend, restarts=3)
+            labels, centroids, feats = km.labels, km.centroids, z
+        elif scheme == "cpi":
+            from .dalenius import dalenius_gurney_strata
+            labels = dalenius_gurney_strata(phase1_baseline_y, num_strata)
+            # "centroid" reduces to the stratum-mean CPI (paper V.B.1)
+            centroids = np.array([
+                [phase1_baseline_y[labels == h].mean()]
+                if (labels == h).any() else [np.nan]
+                for h in range(num_strata)
+            ])
+            feats = np.asarray(phase1_baseline_y, dtype=np.float64)[:, None]
+        else:
+            raise ValueError(f"unknown scheme {scheme!r}")
+        counts = np.bincount(labels, minlength=num_strata).astype(np.float64)
+        weights = counts / counts.sum()
+        return Stratification(
+            labels=np.asarray(labels), weights=weights,
+            centroids=np.asarray(centroids), features=np.asarray(feats),
+            phase1_indices=np.asarray(phase1_indices),
+            phase1_baseline_y=np.asarray(phase1_baseline_y), scheme=scheme)
+
+    def select(
+        self,
+        strat: Stratification,
+        *,
+        policy: str = "centroid",
+        per_stratum: int = 1,
+        seed: int = 0,
+    ) -> list[np.ndarray]:
+        """Population indices of selected regions, one array per stratum."""
+        if policy == "random":
+            local = select_random(strat.labels, strat.num_strata,
+                                  np.random.default_rng(seed),
+                                  per_stratum=per_stratum)
+        elif policy == "centroid":
+            local = select_centroid(strat.labels, strat.features,
+                                    strat.centroids, per_stratum=per_stratum)
+        elif policy == "mean":
+            local = select_mean(strat.labels, strat.phase1_baseline_y,
+                                num_strata=strat.num_strata,
+                                per_stratum=per_stratum)
+        else:
+            raise ValueError(f"unknown policy {policy!r}")
+        return [strat.phase1_indices[l] for l in local]
+
+    # -- Step 4a: day-to-day point estimate ----------------------------------
+    def point_estimate(
+        self,
+        strat: Stratification,
+        selected: Sequence[np.ndarray],
+        measure: Callable[[np.ndarray], np.ndarray],
+    ) -> float:
+        flat = np.concatenate([s for s in selected if s.size > 0])
+        y = np.asarray(measure(flat))
+        per_stratum: list[np.ndarray] = []
+        off = 0
+        for s in selected:
+            per_stratum.append(np.arange(off, off + s.size))
+            off += s.size
+        return weighted_point_estimate(
+            [np.asarray(p) for p in per_stratum], y, strat.weights)
+
+    def collapsed_ci(
+        self,
+        strat: Stratification,
+        selected: Sequence[np.ndarray],
+        measure: Callable[[np.ndarray], np.ndarray],
+        *,
+        confidence: float = 0.95,
+    ) -> Estimate:
+        """Practical one-unit-per-stratum CI (paper V.A.3, Fig 9)."""
+        y_h = np.array([float(measure(s)[0]) for s in selected])
+        return collapsed_strata_estimate(
+            y_h, strat.weights, order_by=strat.stratum_order_key(),
+            confidence=confidence)
+
+    # -- Step 4b: periodic multi-unit CI check -------------------------------
+    def ci_check(
+        self,
+        strat: Stratification,
+        measure: Callable[[np.ndarray], np.ndarray],
+        *,
+        per_stratum_sizes: np.ndarray,
+        confidence: float = 0.95,
+        seed: int = 0,
+    ) -> Estimate:
+        rng = np.random.default_rng(seed)
+        ys, labels = [], []
+        for h in range(strat.num_strata):
+            pool = strat.phase1_indices[strat.labels == h]
+            k = int(min(per_stratum_sizes[h], pool.size))
+            if k == 0:
+                continue
+            chosen = rng.choice(pool, size=k, replace=False)
+            ys.append(np.asarray(measure(chosen)))
+            labels.append(np.full(k, h))
+        y = np.concatenate(ys)
+        lab = np.concatenate(labels)
+        summaries = summarize_strata(y, lab, weights=strat.weights,
+                                     num_strata=strat.num_strata)
+        return two_phase_estimate(summaries, phase1_n=strat.phase1_indices.size,
+                                  confidence=confidence)

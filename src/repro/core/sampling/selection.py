@@ -1,0 +1,109 @@
+"""Within-stratum sample-unit selection policies (paper Section V.B).
+
+SimPoint uses deterministic *centroid* selection (the unit whose feature
+vector is nearest the cluster centroid). The paper additionally evaluates
+*random* selection (textbook stratified sampling) and *mean selection*
+(the unit whose baseline CPI is nearest the stratum's mean baseline CPI).
+Deterministic selection is "better than random", so random-selection CIs
+serve as conservative bounds (paper Section III).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def select_random(
+    labels: np.ndarray,
+    num_strata: int,
+    rng: np.random.Generator,
+    *,
+    per_stratum: int = 1,
+) -> list[np.ndarray]:
+    """Uniform without-replacement choice of ``per_stratum`` units per stratum.
+
+    Returns a list of index arrays, one per stratum (empty for empty strata;
+    fewer than ``per_stratum`` if the stratum is small).
+    """
+    out = []
+    for h in range(num_strata):
+        idx = np.flatnonzero(labels == h)
+        if idx.size == 0:
+            out.append(idx)
+            continue
+        k = min(per_stratum, idx.size)
+        out.append(rng.choice(idx, size=k, replace=False))
+    return out
+
+
+def select_centroid(
+    labels: np.ndarray,
+    features: np.ndarray,
+    centroids: np.ndarray,
+    *,
+    per_stratum: int = 1,
+) -> list[np.ndarray]:
+    """SimPoint-style: units whose feature vectors are nearest the centroid.
+
+    ``features``: (n, d) standardized feature matrix used for clustering.
+    ``centroids``: (L, d). Returns the ``per_stratum`` nearest units per
+    stratum (ties broken by index order for determinism).
+    """
+    num_strata = centroids.shape[0]
+    out = []
+    for h in range(num_strata):
+        idx = np.flatnonzero(labels == h)
+        if idx.size == 0:
+            out.append(idx)
+            continue
+        d = np.linalg.norm(features[idx] - centroids[h][None, :], axis=1)
+        k = min(per_stratum, idx.size)
+        nearest = idx[np.argsort(d, kind="stable")[:k]]
+        out.append(nearest)
+    return out
+
+
+def select_mean(
+    labels: np.ndarray,
+    baseline_y: np.ndarray,
+    *,
+    num_strata: int,
+    per_stratum: int = 1,
+) -> list[np.ndarray]:
+    """Mean selection (paper V.B.2): unit with baseline CPI nearest the
+    stratum's mean baseline CPI."""
+    out = []
+    for h in range(num_strata):
+        idx = np.flatnonzero(labels == h)
+        if idx.size == 0:
+            out.append(idx)
+            continue
+        target = baseline_y[idx].mean()
+        d = np.abs(baseline_y[idx] - target)
+        k = min(per_stratum, idx.size)
+        out.append(idx[np.argsort(d, kind="stable")[:k]])
+    return out
+
+
+def weighted_point_estimate(
+    selected: list[np.ndarray],
+    y: np.ndarray,
+    weights: np.ndarray,
+) -> float:
+    """SimPoint-style weighted mean over deterministically selected units.
+
+    ``weights[h]`` = W_h; multiple units per stratum are averaged within the
+    stratum before weighting.
+    """
+    mean = 0.0
+    total_w = 0.0
+    for h, idx in enumerate(selected):
+        if idx.size == 0:
+            continue
+        mean += weights[h] * float(y[idx].mean())
+        total_w += weights[h]
+    if total_w <= 0:
+        raise ValueError("no strata selected")
+    return mean / total_w

@@ -1,0 +1,147 @@
+"""Stratified random sampling (Appendix A, Section B; Cochran Ch. 5).
+
+Estimators (paper eq. 3):
+    ybar  = sum_h W_h ybar_h
+    v(ybar) = sum_h W_h^2 s_h^2 / n_h
+
+Degrees of freedom: z when every stratum sample is large or L is large
+(Lohr Sec. 4.2); otherwise Satterthwaite (eq. from [30]) or the rule of
+thumb df = n - L ([31]).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .types import Estimate, StratumSummary, as_float_array
+
+
+def summarize_strata(
+    y,
+    strata,
+    *,
+    weights: Optional[Sequence[float]] = None,
+    num_strata: Optional[int] = None,
+) -> list[StratumSummary]:
+    """Build per-stratum summaries from sampled values + stratum labels.
+
+    ``weights`` are population stratum weights W_h (must sum to ~1). When
+    omitted, the *sample* proportions are used (valid for proportional
+    allocation / post-stratification of a random sample).
+    Strata with no sampled units get n=0 summaries (mean/var NaN) so callers
+    can detect incomplete designs.
+    """
+    yv = as_float_array(y)
+    sv = np.asarray(strata)
+    if yv.shape[0] != sv.shape[0]:
+        raise ValueError("y and strata must align")
+    L = int(num_strata if num_strata is not None else (sv.max() + 1 if sv.size else 0))
+    if weights is None:
+        counts = np.bincount(sv, minlength=L).astype(np.float64)
+        weights = counts / max(counts.sum(), 1.0)
+    w = np.asarray(weights, dtype=np.float64)
+    if w.shape[0] != L:
+        raise ValueError(f"weights length {w.shape[0]} != num strata {L}")
+    total_w = w.sum()
+    if not np.isclose(total_w, 1.0, atol=1e-6):
+        raise ValueError(f"stratum weights sum to {total_w}, expected 1")
+
+    out: list[StratumSummary] = []
+    for h in range(L):
+        mask = sv == h
+        n_h = int(mask.sum())
+        if n_h == 0:
+            out.append(StratumSummary(weight=float(w[h]), n=0,
+                                      mean=float("nan"), var=float("nan")))
+        elif n_h == 1:
+            out.append(StratumSummary(weight=float(w[h]), n=1,
+                                      mean=float(yv[mask][0]), var=float("nan")))
+        else:
+            vals = yv[mask]
+            out.append(StratumSummary(weight=float(w[h]), n=n_h,
+                                      mean=float(vals.mean()),
+                                      var=float(vals.var(ddof=1))))
+    return out
+
+
+def stratified_mean(summaries: Sequence[StratumSummary]) -> float:
+    """ybar_st = sum_h W_h ybar_h. Empty strata (n=0) are an error."""
+    mean = 0.0
+    for s in summaries:
+        if s.n == 0 and s.weight > 0:
+            raise ValueError("stratum with positive weight has no sampled units")
+        if s.n > 0:
+            mean += s.weight * s.mean
+    return mean
+
+
+def stratified_variance(summaries: Sequence[StratumSummary]) -> float:
+    """v(ybar_st) = sum_h W_h^2 s_h^2 / n_h. Requires n_h >= 2 everywhere."""
+    v = 0.0
+    for s in summaries:
+        if s.weight == 0.0:
+            continue
+        if s.n < 2 or not np.isfinite(s.var):
+            raise ValueError(
+                "within-stratum variance needs n_h >= 2 (paper fn.7); "
+                "use collapsed strata for one-unit-per-stratum designs")
+        v += (s.weight ** 2) * s.var / s.n
+    return v
+
+
+def satterthwaite_df(summaries: Sequence[StratumSummary]) -> float:
+    """Satterthwaite [30] effective degrees of freedom for ybar_st."""
+    num = 0.0
+    den = 0.0
+    for s in summaries:
+        if s.n < 2 or s.weight == 0.0:
+            continue
+        g = (s.weight ** 2) * s.var / s.n
+        num += g
+        den += g * g / (s.n - 1)
+    if den == 0.0:
+        return float("inf")
+    return num * num / den
+
+
+def stratified_estimate(
+    summaries: Sequence[StratumSummary],
+    *,
+    confidence: float = 0.95,
+    df_method: str = "satterthwaite",
+) -> Estimate:
+    """Combine per-stratum summaries into a mean + CI (paper eq. 3).
+
+    ``df_method``: "satterthwaite" | "n_minus_L" | "z".
+    """
+    mean = stratified_mean(summaries)
+    var = stratified_variance(summaries)
+    n = sum(s.n for s in summaries)
+    L = sum(1 for s in summaries if s.weight > 0)
+    if df_method == "z":
+        df = None
+    elif df_method == "n_minus_L":
+        df = float(max(n - L, 1))
+    elif df_method == "satterthwaite":
+        df = satterthwaite_df(summaries)
+        if not np.isfinite(df):
+            df = None
+    else:
+        raise ValueError(f"unknown df_method {df_method!r}")
+    return Estimate(mean=mean, variance=var, n=n, df=df,
+                    confidence=confidence, scheme="stratified")
+
+
+def stratified_estimate_from_samples(
+    y,
+    strata,
+    *,
+    weights: Optional[Sequence[float]] = None,
+    num_strata: Optional[int] = None,
+    confidence: float = 0.95,
+    df_method: str = "satterthwaite",
+) -> Estimate:
+    summaries = summarize_strata(y, strata, weights=weights, num_strata=num_strata)
+    return stratified_estimate(summaries, confidence=confidence, df_method=df_method)

@@ -1,0 +1,114 @@
+"""Two-phase (double) sampling for stratification (Appendix A, Section D).
+
+Phase 1: large SRS of size n' collects the auxiliary variable x (here: the
+baseline-config RFV / CPI for each sampled region). The population is then
+stratified from the phase-1 sample. Phase 2: stratified subsample measures
+the study variable y (CPI under a new configuration).
+
+Variance of the two-phase mean — paper eq. (5):
+    v(ybar) = s^2 / n' + sum_h W_h^2 s_h^2 / n_h
+
+and the phase-2-only form — paper eq. (6):
+    v(ybar) = (1/n') sum_h W_h (ybar_h - ybar)^2 + sum_h W_h^2 s_h^2 / n_h
+
+Equation (6) lets later studies compute CIs without the phase-1 y values:
+only stratum weights (shaped by phase 1) and phase-2 data enter.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .stratified import (StratumSummary, satterthwaite_df, stratified_mean,
+                         stratified_variance)
+from .types import Estimate
+
+
+def two_phase_estimate(
+    summaries: Sequence[StratumSummary],
+    phase1_n: int,
+    *,
+    phase1_var: Optional[float] = None,
+    confidence: float = 0.95,
+    formula: str = "phase2_only",
+) -> Estimate:
+    """Two-phase mean + CI from phase-2 per-stratum summaries.
+
+    ``formula="with_phase1_var"`` uses eq. (5) and needs ``phase1_var`` (the
+    phase-1 population variance estimate s^2 of *y*, only available when the
+    phase-1 study variable matches). ``formula="phase2_only"`` uses eq. (6),
+    the form the paper recommends for re-use across configurations.
+    """
+    if phase1_n < 1:
+        raise ValueError("phase-1 sample size must be >= 1")
+    mean = stratified_mean(summaries)
+    v_phase2 = stratified_variance(summaries)
+
+    if formula == "with_phase1_var":
+        if phase1_var is None:
+            raise ValueError("eq. (5) needs phase1_var")
+        v_phase1 = float(phase1_var) / phase1_n
+    elif formula == "phase2_only":
+        between = 0.0
+        for s in summaries:
+            if s.n > 0:
+                between += s.weight * (s.mean - mean) ** 2
+        v_phase1 = between / phase1_n
+    else:
+        raise ValueError(f"unknown formula {formula!r}")
+
+    var = v_phase1 + v_phase2
+    n = sum(s.n for s in summaries)
+    df = satterthwaite_df(summaries)
+    if not np.isfinite(df):
+        df = None
+    return Estimate(mean=mean, variance=var, n=n, df=df,
+                    confidence=confidence, scheme=f"two_phase[{formula}]")
+
+
+def phase2_sizes_for_margin(
+    weights: Sequence[float],
+    within_stds: Sequence[float],
+    phase1_n: int,
+    between_var: float,
+    *,
+    target_margin_abs: float,
+    confidence: float = 0.95,
+    allocation: str = "neyman",
+    min_per_stratum: int = 2,
+    max_total: int = 10**7,
+) -> np.ndarray:
+    """Choose phase-2 per-stratum sizes so the eq. (6) margin hits a target.
+
+    This implements the paper's Table IV sizing policy: the phase-1 term
+    ``between_var / phase1_n`` is fixed; we solve for the total phase-2 size
+    whose stratified term brings the *combined* margin under
+    ``target_margin_abs``, then allocate across strata.
+    """
+    from .types import critical_value
+
+    w = np.asarray(weights, dtype=np.float64)
+    s = np.asarray(within_stds, dtype=np.float64)
+    z = critical_value(confidence, None)
+    v_target = (target_margin_abs / z) ** 2
+    v_phase1 = between_var / phase1_n
+    v_budget = v_target - v_phase1
+    if v_budget <= 0:
+        raise ValueError(
+            "target margin unattainable: phase-1 variance term alone "
+            f"({v_phase1:.3e}) exceeds the variance budget ({v_target:.3e})")
+
+    if allocation == "neyman":
+        # v_phase2(n) = (sum W_h S_h)^2 / n under Neyman allocation.
+        n_total = int(np.ceil(((w * s).sum() ** 2) / v_budget))
+        from .allocation import neyman_allocation
+        n_total = min(max(n_total, 2 * len(w)), max_total)
+        return neyman_allocation(w, s, n_total, min_per_stratum=min_per_stratum)
+    elif allocation == "proportional":
+        n_total = int(np.ceil((w * s * s).sum() / v_budget))
+        from .allocation import proportional_allocation
+        n_total = min(max(n_total, 2 * len(w)), max_total)
+        return proportional_allocation(w, n_total)
+    raise ValueError(f"unknown allocation {allocation!r}")

@@ -1,0 +1,99 @@
+"""Common result types for the sampling estimators.
+
+Terminology follows Cochran, *Sampling Techniques* (3rd ed.) and the paper's
+Appendix A: the *population* is the set of all simulation regions of one
+application, a *sampling unit* is one region, ``y`` is the study variable
+(CPI under the configuration being estimated) and ``x`` is an auxiliary
+variable known (or measured in phase 1) for stratification.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+from scipy import stats as _scipy_stats
+
+
+def critical_value(confidence: float, df: Optional[float]) -> float:
+    """z- or t- critical value for a two-sided interval.
+
+    ``df=None`` (or very large) selects the normal approximation; otherwise
+    Student's t with ``df`` degrees of freedom (Appendix A: t for small n,
+    Satterthwaite / rule-of-thumb dfs for stratified designs).
+    """
+    alpha = 1.0 - confidence
+    if df is None or df >= 1e6:
+        return float(_scipy_stats.norm.ppf(1.0 - alpha / 2.0))
+    df = max(float(df), 1.0)
+    return float(_scipy_stats.t.ppf(1.0 - alpha / 2.0, df))
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimate:
+    """A point estimate with its sampling variance and a confidence interval.
+
+    ``margin`` is the *absolute* half-width ``crit * sqrt(variance)``;
+    ``margin_pct`` the relative margin of error in percent (the quantity the
+    paper plots in Figs 7-9).
+    """
+
+    mean: float
+    variance: float            # v(ybar): variance of the *sample mean*
+    n: int                     # total sampled units
+    df: Optional[float]        # degrees of freedom used (None => z)
+    confidence: float = 0.95
+    scheme: str = "srs"
+
+    @property
+    def std_error(self) -> float:
+        return math.sqrt(max(self.variance, 0.0))
+
+    @property
+    def margin(self) -> float:
+        return critical_value(self.confidence, self.df) * self.std_error
+
+    @property
+    def margin_pct(self) -> float:
+        if self.mean == 0.0:
+            return float("inf")
+        return 100.0 * self.margin / abs(self.mean)
+
+    @property
+    def interval(self) -> tuple[float, float]:
+        return (self.mean - self.margin, self.mean + self.margin)
+
+    def covers(self, true_value: float) -> bool:
+        lo, hi = self.interval
+        return lo <= true_value <= hi
+
+    def error_pct(self, true_value: float) -> float:
+        """Relative estimation error vs a known reference (paper Fig 10/11)."""
+        if true_value == 0.0:
+            return float("inf")
+        return 100.0 * abs(self.mean - true_value) / abs(true_value)
+
+
+@dataclasses.dataclass(frozen=True)
+class StratumSummary:
+    """Per-stratum sample statistics (h indexes strata)."""
+
+    weight: float              # W_h = N_h / N
+    n: int                     # n_h sampled units
+    mean: float                # ybar_h
+    var: float                 # s_h^2 (within-stratum sample variance)
+
+    def __post_init__(self):
+        if self.weight < 0:
+            raise ValueError(f"negative stratum weight {self.weight}")
+        if self.n < 0:
+            raise ValueError(f"negative stratum sample size {self.n}")
+
+
+def as_float_array(values) -> np.ndarray:
+    arr = np.asarray(values, dtype=np.float64)
+    if arr.ndim != 1:
+        arr = arr.reshape(-1)
+    return arr

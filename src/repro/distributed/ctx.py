@@ -1,0 +1,123 @@
+"""Ambient activation-sharding context.
+
+Model code calls ``constrain(x, kind)`` at strategic points; outside a
+distribution context (unit tests, smoke runs on one device) these are
+no-ops, while under ``activation_sharding(mesh)`` they emit
+``with_sharding_constraint`` so GSPMD produces the intended collective
+schedule instead of guessing.
+
+Kinds:
+    bsd        (b, s, d)  tokens: batch over data axes; seq over "model"
+               (Megatron sequence parallelism) when cfg.seq_parallel
+    bshd       (b, s, h, dh) attention heads over "model"
+    bhsd       (b, h, s, dh)
+    logits_v   (b, s, v) vocab over "model" (vocab-parallel loss)
+    ecd        (e, c, d) MoE expert-parallel
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_STACK: list[dict] = []
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, *, seq_parallel: bool = True):
+    names = set(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    entry = {
+        "mesh": mesh,
+        "dp": dp if len(dp) > 1 else (dp[0] if dp else None),
+        "tp": "model" if "model" in names else None,
+        "seq_parallel": seq_parallel,
+        "mp_size": mesh.shape["model"] if "model" in names else 1,
+        "dp_size": int(jax.numpy.prod(jax.numpy.array(
+            [mesh.shape[a] for a in dp]))) if dp else 1,
+    }
+    _STACK.append(entry)
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def _active() -> Optional[dict]:
+    return _STACK[-1] if _STACK else None
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    ctx = _active()
+    if ctx is None or ctx["tp"] is None:
+        return x
+    dp, tp, mp = ctx["dp"], ctx["tp"], ctx["mp_size"]
+    spec = None
+    if kind == "bsd" and x.ndim == 3:
+        seq = tp if (ctx["seq_parallel"] and _divisible(x.shape[1], mp)) \
+            else None
+        spec = P(dp, seq, None)
+    elif kind == "bsd_batch_only" and x.ndim == 3:
+        # recurrent (scan-over-sequence) blocks: sequence sharding would
+        # force GSPMD to all-gather the full sequence per layer AND
+        # replicate the scan across the TP axis — batch-only here.
+        spec = P(dp, None, None)
+    elif kind == "bshd" and x.ndim == 4:
+        # prefer head-sharded TP; fall back to sharding the query sequence
+        # (attention rows are independent) when heads don't divide.
+        if _divisible(x.shape[2], mp):
+            spec = P(dp, None, tp, None)
+        elif _divisible(x.shape[1], mp):
+            spec = P(dp, tp, None, None)
+        else:
+            spec = P(dp, None, None, None)
+    elif kind == "bshd_kv" and x.ndim == 4:
+        # keys/values must keep the full sequence; shard heads or replicate
+        spec = P(dp, None, tp if _divisible(x.shape[2], mp) else None, None)
+    elif kind == "bhsd" and x.ndim == 4:
+        spec = P(dp, tp if _divisible(x.shape[1], mp) else None, None, None)
+    elif kind == "logits_v" and x.ndim == 3:
+        # vocab-parallel when the vocab divides; else sequence-parallel
+        # (a replicated (b, s, V) logits tensor is the single biggest
+        # memory hazard in the whole framework)
+        if _divisible(x.shape[2], mp):
+            spec = P(dp, None, tp)
+        elif _divisible(x.shape[1], mp):
+            spec = P(dp, tp, None)
+        else:
+            spec = P(dp, None, None)
+    elif kind == "ecd" and x.ndim == 3:
+        spec = P(tp if _divisible(x.shape[0], mp) else None, None, None)
+    elif kind == "gtd" and x.ndim == 3:
+        spec = P(dp if _divisible(x.shape[0], ctx["dp_size"]) else None,
+                 None, None)
+    elif kind == "gecd" and x.ndim == 4:
+        spec = P(dp if _divisible(x.shape[0], ctx["dp_size"]) else None,
+                 tp if _divisible(x.shape[1], mp) else None, None, None)
+    elif kind == "gec" and x.ndim == 3:
+        spec = P(dp if _divisible(x.shape[0], ctx["dp_size"]) else None,
+                 tp if _divisible(x.shape[1], mp) else None, None)
+    elif kind == "gt" and x.ndim == 2:
+        spec = P(dp if _divisible(x.shape[0], ctx["dp_size"]) else None,
+                 None)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_group_count() -> int:
+    """Number of MoE routing groups = the data-parallel degree (1 off-mesh)."""
+    ctx = _active()
+    return int(ctx["dp_size"]) if ctx else 1
+
+
+def seq_parallel_enabled() -> bool:
+    ctx = _active()
+    return bool(ctx and ctx["seq_parallel"])

@@ -1,0 +1,239 @@
+"""Parameter / activation / cache sharding rules.
+
+Megatron-style tensor parallelism on the "model" axis, data parallelism on
+("pod", "data"). Rules are name-based over flattened param paths, with an
+automatic divisibility fallback: any dim that the mesh axis does not divide
+is replicated instead (logged once). Stacked per-layer leaves (leading
+n_layers axis from lax.scan stacking) get a leading None prepended
+automatically by ndim comparison.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..launch.mesh import data_axes
+
+PyTree = Any
+
+# (path-suffix substring, spec WITHOUT the stacked-layer axis). Earlier
+# rules win. Specs use "model" for TP and None elsewhere; the stacked layer
+# dim is inferred.
+# "model" = Megatron tensor parallel; "__dp__" = FSDP over the data axes
+# (GSPMD all-gathers per use, reduce-scatters grads — ZeRO-3 semantics).
+_PARAM_RULES: tuple[tuple[str, tuple], ...] = (
+    # embeddings / heads
+    ("embed", ("model", "__dp__")),
+    ("lm_head", ("__dp__", "model")),
+    # attention
+    ("attn.wq", ("__dp__", "model")),
+    ("attn.wk", ("__dp__", "model")),
+    ("attn.wv", ("__dp__", "model")),
+    ("attn.wo", ("model", "__dp__")),
+    ("self_attn.wq", ("__dp__", "model")),
+    ("self_attn.wk", ("__dp__", "model")),
+    ("self_attn.wv", ("__dp__", "model")),
+    ("self_attn.wo", ("model", "__dp__")),
+    ("cross_attn.wq", ("__dp__", "model")),
+    ("cross_attn.wk", ("__dp__", "model")),
+    ("cross_attn.wv", ("__dp__", "model")),
+    ("cross_attn.wo", ("model", "__dp__")),
+    # dense mlp
+    ("ffn.w_gate", ("__dp__", "model")),
+    ("ffn.w_up", ("__dp__", "model")),
+    ("ffn.w_down", ("model", "__dp__")),
+    # moe (expert-parallel on "model")
+    ("ffn.router", (None, None)),
+    # note: moe w_gate/w_up/w_down are 4-D stacked — see _spec_for
+    # rwkv time mix
+    ("tm.wr", ("__dp__", "model")),
+    ("tm.wk", ("__dp__", "model")),
+    ("tm.wv", ("__dp__", "model")),
+    ("tm.wo", ("model", "__dp__")),
+    ("tm.w_lora_a", (None, None)),
+    ("tm.w_lora_b", (None, None)),
+    # rwkv channel mix
+    ("cm.wk", ("__dp__", "model")),
+    ("cm.wv", ("model", "__dp__")),
+    ("cm.wr", ("__dp__", "model")),
+    # rglru
+    ("rglru.w_in", ("__dp__", "model")),
+    ("rglru.w_gate_in", ("__dp__", "model")),
+    ("rglru.conv_k", (None, "model")),
+    ("rglru.w_r", ("__dp__", "model")),
+    ("rglru.w_i", ("__dp__", "model")),
+    ("rglru.lam", ("model",)),
+    ("rglru.w_out", ("model", "__dp__")),
+)
+
+# expert weights: experts on "model", FSDP on the data axes over d_model /
+# d_ff (GSPMD all-gathers per layer; ZeRO-3 semantics)
+_MOE_3D = {"w_gate": ("model", "__dp__", None),
+           "w_up": ("model", "__dp__", None),
+           "w_down": ("model", "__dp__", None)}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return ".".join(parts)
+
+
+def _fallback(spec: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Replicate any dim the mesh axis does not divide. The placeholder
+    "__dp__" resolves to the mesh's data axes (FSDP sharding)."""
+    dp = data_axes(mesh)
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        if ax == "__dp__":
+            size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+            if size > 1 and dim % size == 0:
+                fixed.append(dp if len(dp) > 1 else dp[0])
+            else:
+                fixed.append(None)
+            continue
+        size = mesh.shape[ax] if ax in mesh.axis_names else 1
+        fixed.append(ax if size > 1 and dim % size == 0 else None)
+    return P(*fixed)
+
+
+def _spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    ndim = len(shape)
+    # MoE expert tensors are 4-D when layer-stacked (L, e, d, f); dense MLP
+    # stacked leaves are 3-D and must fall through to the dense rules.
+    for key, spec in _MOE_3D.items():
+        if path.endswith("ffn." + key) and ndim == 4:
+            return _fallback((None,) + tuple(spec), shape, mesh)
+    for suffix, spec in _PARAM_RULES:
+        if suffix in path:
+            spec = tuple(spec)
+            if ndim == len(spec) + 1:        # layer-stacked
+                spec = (None,) + spec
+            if ndim != len(spec):
+                return P()                   # shape surprise: replicate
+            return _fallback(spec, shape, mesh)
+    return P()                               # norms, scalars: replicated
+
+
+def param_specs(params: PyTree, mesh: Mesh, *,
+                serving: bool = False) -> PyTree:
+    """PartitionSpec tree matching ``params`` (works on ShapeDtypeStructs).
+
+    ``serving=True`` drops the FSDP ("__dp__") axes when the TP-sharded
+    parameters fit in HBM: inference has no optimizer state and re-reads
+    weights every token, so per-layer FSDP all-gathers are pure collective
+    overhead. Models too big for TP-only sharding keep FSDP (the gathers
+    are then the price of fitting).
+    """
+    drop_dp = False
+    if serving:
+        mp = mesh.shape.get("model", 1) if hasattr(mesh.shape, "get") \
+            else (mesh.shape["model"] if "model" in mesh.axis_names else 1)
+        total = sum(
+            int(np.prod(l.shape)) * getattr(l.dtype, "itemsize", 2)
+            for l in jax.tree_util.tree_leaves(params))
+        drop_dp = (total / max(mp, 1)) < 12 * 2**30
+
+    def spec(path, leaf):
+        p = _spec_for(_path_str(path), tuple(leaf.shape), mesh)
+        if drop_dp:
+            dp = set(data_axes(mesh))
+            parts = tuple(
+                None if (a in dp or (isinstance(a, tuple) and set(a) & dp))
+                else a for a in tuple(p))
+            return P(*parts)
+        return p
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def opt_state_specs(params: PyTree, mesh: Mesh, *, zero: bool = True
+                    ) -> PyTree:
+    """Optimizer-moment specs. ``zero=True`` additionally shards moments
+    over the data axes on the first divisible unsharded dim (ZeRO-style
+    optimizer-state partitioning — 8x memory cut at dp=16/32)."""
+    specs = param_specs(params, mesh)
+    if not zero:
+        return specs
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def shard_more(path, leaf, spec):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = set()
+        for ax in parts:
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                if a is not None:
+                    used.add(a)
+        if used & set(dp):
+            return P(*parts)        # param already FSDP-sharded on data
+        for i, (dim, ax) in enumerate(zip(leaf.shape, parts)):
+            if ax is None and dp_size > 1 and dim % dp_size == 0 and dim >= dp_size * 8:
+                parts[i] = dp if len(dp) > 1 else dp[0]
+                break
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf, spec: shard_more(path, leaf, spec),
+        params, specs)
+
+
+def batch_specs(cfg, mesh: Mesh, kind: str) -> PyTree:
+    """Input shardings for a shape cell. tokens/labels: (b, s)."""
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tok = P(dpa, None)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.family == "encdec":
+        out["src_embeds"] = P(dpa, None, None)
+    if kind != "train":
+        out.pop("labels")
+    return out
+
+
+def cache_specs(cfg, caches: PyTree, mesh: Mesh) -> PyTree:
+    """Decode-cache shardings: batch on data axes; long sequence dims on
+    "model" (flash-decoding style sequence sharding); everything else
+    replicated if not divisible."""
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) > 1 else (dp[0] if dp else None)
+    mp_size = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        parts: list = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % dp_size == 0 and dp_size > 1:
+            parts[1] = dpa                     # (L, b, ...) batch dim
+        # shard the TP axis on heads, else head_dim, else the longest dim
+        # (seq) — heads/head_dim keep decode's dynamic_update_slice local,
+        # avoiding GSPMD's involuntary full rematerialization of the cache.
+        if mp_size > 1 and len(shape) == 5:    # (L, b, h, s, dh) kv cache
+            for cand in (2, 4, 3):
+                if shape[cand] % mp_size == 0 and shape[cand] >= mp_size:
+                    parts[cand] = "model"
+                    break
+        elif mp_size > 1 and len(shape) >= 3:
+            cand = max(range(2, len(shape)), key=lambda i: shape[i])
+            if shape[cand] % mp_size == 0 and shape[cand] >= mp_size * 8:
+                parts[cand] = "model"
+        return P(*parts)
+
+    return jax.tree.map(spec, caches)

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: causal flash attention (streaming softmax).
+
+Standard online-softmax formulation adapted to TPU VMEM tiling:
+
+* grid = (batch·heads, q_blocks, kv_blocks) with kv innermost, so the
+  running (m, l, acc) state lives in VMEM scratch across kv steps;
+* q tile (BLOCK_Q, d) and k/v tiles (BLOCK_K, d) are MXU-aligned
+  (d = head_dim is 128 for every assigned architecture);
+* causal masking via broadcasted iotas with END-alignment: query row i
+  (global) attends kv columns <= i + (skv - sq), so the same kernel serves
+  training (sq == skv) and decode (sq == 1, skv == cache length);
+* ``kv_start`` masks front-padding columns (ops.py pads q and kv at the
+  front to reach tile multiples, which preserves end-alignment).
+
+Numerics: accumulation in f32 regardless of input dtype (bf16 on TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 256
+BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, causal: bool, sq: int, skv: int,
+                  kv_start: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (BLOCK_Q, d)
+    k = k_ref[0].astype(jnp.float32)                 # (BLOCK_K, d)
+    v = v_ref[0].astype(jnp.float32)                 # (BLOCK_K, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    rows = qi * BLOCK_Q + jax.lax.broadcasted_iota(
+        jnp.int32, (BLOCK_Q, BLOCK_K), 0)
+    cols = ki * BLOCK_K + jax.lax.broadcasted_iota(
+        jnp.int32, (BLOCK_Q, BLOCK_K), 1)
+    mask = cols >= kv_start
+    if causal:
+        mask &= cols <= rows + (skv - sq)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (BLOCK_Q, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                           # (BLOCK_Q, BLOCK_K)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "kv_start",
+                                    "interpret"))
+def flash_attention_padded(q: jax.Array, k: jax.Array, v: jax.Array,
+                           *, causal: bool, scale: float, kv_start: int = 0,
+                           interpret: bool = False) -> jax.Array:
+    """q: (bh, sq, d); k, v: (bh, skv, d); sq % BLOCK_Q == 0,
+    skv % BLOCK_K == 0. Columns < kv_start are never attended."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    grid = (bh, sq // BLOCK_Q, skv // BLOCK_K)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               sq=sq, skv=skv, kv_start=kv_start)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BLOCK_K, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BLOCK_K, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((BLOCK_Q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,57 @@
+"""Jitted public wrapper for flash attention with GQA + padding handling."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import BLOCK_K, BLOCK_Q, flash_attention_padded
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Causal attention. q: (b, hq, sq, d); k, v: (b, hkv, skv, d).
+
+    GQA: hq must be a multiple of hkv; kv heads are broadcast. q and kv are
+    FRONT-padded to tile multiples, which preserves the causal
+    end-alignment (row i attends cols <= i + skv - sq); padded kv columns
+    are excluded via the kernel's ``kv_start`` mask, and padded q rows are
+    sliced off the output.
+    """
+    if not causal:
+        raise NotImplementedError("kernel path is causal-only; use ref.py")
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hq % hkv:
+        raise ValueError(f"GQA heads mismatch: {hq} % {hkv}")
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+
+    sq_p = _round_up(sq, BLOCK_Q)
+    skv_p = _round_up(skv, BLOCK_K)
+    d_p = _round_up(d, 128)
+    fq = sq_p - sq
+    fk = skv_p - skv
+    qp = jnp.zeros((b, hq, sq_p, d_p), q.dtype).at[:, :, fq:, :d].set(q)
+    kp = jnp.zeros((b, hq, skv_p, d_p), k.dtype).at[:, :, fk:, :d].set(k)
+    vp = jnp.zeros((b, hq, skv_p, d_p), v.dtype).at[:, :, fk:, :d].set(v)
+
+    out = flash_attention_padded(
+        qp.reshape(b * hq, sq_p, d_p),
+        kp.reshape(b * hq, skv_p, d_p),
+        vp.reshape(b * hq, skv_p, d_p),
+        causal=True, scale=scale, kv_start=fk,
+        interpret=jax.default_backend() != "tpu")
+    return out.reshape(b, hq, sq_p, d_p)[:, :, fq:, :d]

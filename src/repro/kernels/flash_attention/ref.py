@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for causal (optionally windowed) attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  *, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (b, h, sq, d); k, v: (b, h, skv, d) (kv heads already broadcast).
+
+    ``window``: local-attention width (keys within [i-window+1, i], used by
+    the RecurrentGemma hybrid); None = full causal.
+    """
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(sq)[:, None] + (skv - sq)   # align ends (decode-friendly)
+    ki = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,58 @@
+"""Jitted public wrapper for the k-means assignment kernel.
+
+Handles padding to hardware-aligned shapes and falls back to interpret mode
+off-TPU (this container validates the kernel body on CPU; TPU is the
+compile target).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kmeans_assign import BLOCK_N, kmeans_assign_padded
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def kmeans_assign(x: jax.Array, centroids: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid assignment via the Pallas kernel.
+
+    x: (n, d), centroids: (k, d) -> (labels (n,) int32, min_d2 (n,) f32).
+    Pads n to BLOCK_N, k and d to multiples of 128; padded centroids get
+    +inf |c|^2 so they can never win the argmin; padded d columns are zero
+    in both operands so distances are unchanged.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(centroids, jnp.float32)
+    n, d = x.shape
+    k = c.shape[0]
+    if c.shape[1] != d:
+        raise ValueError(f"dim mismatch: x {x.shape} vs centroids {c.shape}")
+
+    n_p = _round_up(max(n, 1), BLOCK_N)
+    d_p = _round_up(max(d, 1), 128)
+    k_p = _round_up(max(k, 1), 128)
+
+    x_p = jnp.zeros((n_p, d_p), jnp.float32).at[:n, :d].set(x)
+    c_p = jnp.zeros((k_p, d_p), jnp.float32).at[:k, :d].set(c)
+    c2 = jnp.full((1, k_p), jnp.inf, jnp.float32).at[0, :k].set(
+        jnp.sum(c * c, axis=1))
+
+    labels, mind2 = kmeans_assign_padded(x_p, c_p, c2,
+                                         interpret=not _on_tpu())
+    return labels[:n], mind2[:n]
+
+
+def kmeans_assign_np(x: np.ndarray, centroids: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    labels, mind2 = kmeans_assign(x, centroids)
+    return np.asarray(labels), np.asarray(mind2)

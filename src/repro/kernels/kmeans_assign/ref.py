@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the k-means assignment kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x: jax.Array, centroids: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid assignment.
+
+    x: (n, d); centroids: (k, d). Returns (labels int32 (n,), min squared
+    distance f32 (n,)). Distances computed in f32 with the expanded form
+    |x|^2 - 2 x.cT + |c|^2 (matching the kernel's MXU-friendly formulation).
+    """
+    x = x.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)
+    d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return labels, jnp.maximum(jnp.min(d2, axis=1), 0.0)

@@ -1,0 +1,47 @@
+"""Jitted public wrapper for the segment-stats kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .segment_stats import BLOCK_N, segment_stats_padded
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def segment_stats(x: jax.Array, labels: jax.Array, num_segments: int
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-segment (sums, sumsq, counts). Pads n to BLOCK_N with label -1
+    rows (matching no segment) so padding contributes nothing."""
+    x = jnp.asarray(x, jnp.float32)
+    labels = jnp.asarray(labels, jnp.int32)
+    if x.ndim == 1:
+        x = x[:, None]
+    n, d = x.shape
+    if labels.shape != (n,):
+        raise ValueError(f"labels shape {labels.shape} != ({n},)")
+    n_p = _round_up(max(n, 1), BLOCK_N)
+    x_p = jnp.zeros((n_p, d), jnp.float32).at[:n].set(x)
+    lab_p = jnp.full((n_p, 1), -1, jnp.int32).at[:n, 0].set(labels)
+    interpret = jax.default_backend() != "tpu"
+    return segment_stats_padded(x_p, lab_p, num_segments, interpret=interpret)
+
+
+def stratum_moments(x: jax.Array, labels: jax.Array, num_segments: int
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(means, sample variances, counts) per stratum from the kernel stats.
+
+    Variance uses the n-1 denominator (matches eq. 2); strata with fewer
+    than 2 units get NaN variance (flagging that collapsed strata or more
+    sampling is needed — paper fn. 7).
+    """
+    sums, sumsq, counts = segment_stats(x, labels, num_segments)
+    safe = jnp.maximum(counts, 1.0)
+    means = sums / safe[:, None]
+    ss = sumsq - counts[:, None] * means * means
+    var = jnp.where((counts > 1)[:, None],
+                    ss / jnp.maximum(counts - 1.0, 1.0)[:, None], jnp.nan)
+    return means, var, counts

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for per-stratum statistics."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_stats_ref(x: jax.Array, labels: jax.Array, num_segments: int
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-segment (sum, sum-of-squares, count) of rows of x.
+
+    x: (n, d) f32; labels: (n,) int32 in [0, num_segments).
+    Returns sums (k, d), sumsq (k, d), counts (k,).
+    These are exactly the sufficient statistics of the stratified estimators
+    (eq. 3): means, within-stratum variances, and weights.
+    """
+    x = x.astype(jnp.float32)
+    sums = jax.ops.segment_sum(x, labels, num_segments=num_segments)
+    sumsq = jax.ops.segment_sum(x * x, labels, num_segments=num_segments)
+    counts = jax.ops.segment_sum(jnp.ones(x.shape[:1], jnp.float32), labels,
+                                 num_segments=num_segments)
+    return sums, sumsq, counts

@@ -1,0 +1,137 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may touch jax ---------------------------------------
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this records, to ``results/dryrun/<arch>__<shape>__<mesh>.json``:
+  * memory_analysis (per-device argument/output/temp bytes — proves fit),
+  * cost_analysis flops / bytes accessed,
+  * the collective schedule (per-type counts + bytes, trip-count weighted),
+  * MODEL_FLOPS (6·N·D, active-N for MoE) for the roofline "useful" ratio.
+
+Usage:
+    python -m repro.launch.dryrun                      # full sweep
+    python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k \
+        --mesh single
+Existing result files are skipped (incremental; delete to re-run).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import ALL_ARCHS, SHAPE_BY_NAME, cells_for, get_config
+from ..launch.hlo_analysis import (program_costs,
+                                   summarize_collectives)
+from ..launch.mesh import make_production_mesh
+from ..train.step import lower_cell
+
+RESULTS_DIR = Path(os.environ.get("REPRO_RESULTS", "results/dryrun"))
+
+
+def model_flops_per_step(cfg, cell) -> float:
+    """6·N_active·D for training; 2·N_active·D for inference forward;
+    decode: 2·N_active per token · batch (+ attention cache reads are
+    bytes, not flops)."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch  # one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: Path) -> dict:
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.json"
+    if out_path.exists():
+        return json.loads(out_path.read_text())
+    cfg = get_config(arch)
+    cell = SHAPE_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+           "axes": list(mesh.axis_names)}
+    try:
+        t0 = time.time()
+        lowered = lower_cell(cfg, cell, mesh)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis()
+        rec["cost"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+        hlo_txt = compiled.as_text()
+        rec["collectives"] = summarize_collectives(hlo_txt)
+        # trip-count-weighted per-device costs (XLA's cost_analysis counts
+        # while bodies once; see hlo_analysis.program_costs)
+        rec["cost_weighted"] = program_costs(hlo_txt)
+        rec["model_flops"] = model_flops_per_step(cfg, cell)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape (default all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        cells = cells_for(cfg)
+        shapes = ([args.shape] if args.shape
+                  else [c.name for c in cells])
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape_name, mesh_kind, out_dir)
+                status = "OK " if rec.get("ok") else "FAIL"
+                n_ok += rec.get("ok", False)
+                n_fail += not rec.get("ok", False)
+                mem = rec.get("memory", {})
+                tot = (mem.get("temp_bytes", 0) +
+                       mem.get("argument_bytes", 0)) / 2**30
+                print(f"[{status}] {arch:24s} {shape_name:12s} {mesh_kind:6s} "
+                      f"{round(time.time()-t0,1):6}s mem {tot:6.1f} GB "
+                      f"{rec.get('error','')[:90]}",
+                      flush=True)
+                jax.clear_caches()
+    print(f"dry-run sweep done: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — "pod" is
+an additional pure-data-parallel axis across the inter-pod DCN/ICI links.
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == need:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}, have {len(devs)} — "
+            "the dry-run entry point must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    # more devices than needed (e.g. 512 host devices, single-pod mesh):
+    # build the mesh on a slice.
+    grid = np.asarray(devs[:need]).reshape(shape)
+    return Mesh(grid, axes)
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Small mesh over the actually-available devices (tests/examples)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All pure data-parallel axes of a mesh ("pod" folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, names: Sequence[str]) -> int:
+    size = 1
+    for n in names:
+        if n in mesh.axis_names:
+            size *= mesh.shape[n]
+    return size

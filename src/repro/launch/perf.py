@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may touch jax ---------------------------------------
+"""Performance hillclimbing driver (EXPERIMENTS.md §Perf).
+
+For a chosen (arch × shape) cell, lowers a set of VARIANTS, derives the
+three-term roofline from the trip-weighted HLO costs, and logs
+hypothesis → change → before → after. Variants:
+
+    baseline        the sweep configuration (results/dryrun)
+    serving_params  drop FSDP axes for inference params (prefill/decode)
+    mb<K>           gradient-accumulation depth K (train)
+    remat_off       no activation checkpointing (train)
+    kvchunk<N>      streaming-attention chunk size N
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.perf --arch chameleon-34b \
+        --shape prefill_32k --variants baseline,serving_params
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from ..configs import SHAPE_BY_NAME, get_config
+from ..launch.hlo_analysis import program_costs, summarize_collectives
+from ..launch.mesh import make_production_mesh
+from ..train.step import lower_cell
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def measure(cfg, cell, mesh, *, microbatches=None, serving_params=False,
+            kv_chunk=None, bf16_attn=None, fsdp=None, moe_ffshard=False,
+            remat=True) -> dict:
+    import repro.distributed.sharding as sh_mod
+    import repro.models.attention as attn_mod
+    old_chunk = attn_mod.KV_CHUNK
+    old_bf16 = attn_mod.BF16_ATTENTION_OPERANDS
+    old_moe = dict(sh_mod._MOE_3D)
+    if kv_chunk:
+        attn_mod.KV_CHUNK = kv_chunk
+    if bf16_attn is not None:
+        attn_mod.BF16_ATTENTION_OPERANDS = bf16_attn
+    if moe_ffshard:
+        # shard expert d_ff/d_model over the data axes INSTEAD of FSDP:
+        # same per-device bytes, but the per-microbatch weight all-gather
+        # becomes an activation-sized collective inside the expert einsum.
+        sh_mod._MOE_3D = {"w_gate": ("model", None, "__dp__"),
+                          "w_up": ("model", None, "__dp__"),
+                          "w_down": ("model", "__dp__", None)}
+    try:
+        t0 = time.time()
+        lowered = lower_cell(cfg, cell, mesh, microbatches=microbatches,
+                             serving_params=serving_params, fsdp=fsdp)
+        compiled = lowered.compile()
+        wall = time.time() - t0
+        txt = compiled.as_text()
+        costs = program_costs(txt)
+        colls = summarize_collectives(txt)
+        ma = compiled.memory_analysis()
+        t_comp = costs["flops"] / PEAK_FLOPS
+        t_mem = costs["bytes"] / HBM_BW
+        t_coll = colls["total_wire_bytes"] / ICI_BW
+        bound = max(t_comp, t_mem, t_coll)
+        return {
+            "t_compute_ms": t_comp * 1e3,
+            "t_memory_ms": t_mem * 1e3,
+            "t_collective_ms": t_coll * 1e3,
+            "bound_ms": bound * 1e3,
+            "dominant": max((t_comp, "compute"), (t_mem, "memory"),
+                            (t_coll, "collective"))[1],
+            "temp_gb": ma.temp_size_in_bytes / 2**30,
+            "arg_gb": ma.argument_size_in_bytes / 2**30,
+            "compile_s": round(wall, 1),
+            "hlo_flops": costs["flops"],
+            "hlo_bytes": costs["bytes"],
+            "wire_bytes": colls["total_wire_bytes"],
+        }
+    finally:
+        attn_mod.KV_CHUNK = old_chunk
+        attn_mod.BF16_ATTENTION_OPERANDS = old_bf16
+        sh_mod._MOE_3D = old_moe
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    cell = SHAPE_BY_NAME[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    for variant in args.variants.split(","):
+        kwargs = {}
+        if variant == "baseline":
+            pass
+        elif variant == "serving_params":
+            kwargs["serving_params"] = True
+        elif variant.startswith("mb"):
+            kwargs["microbatches"] = int(variant[2:])
+        elif variant.startswith("kvchunk"):
+            kwargs["kv_chunk"] = int(variant[7:])
+        elif variant == "f32attn":
+            kwargs["bf16_attn"] = False
+        elif variant == "bf16attn":
+            kwargs["bf16_attn"] = True
+        elif variant == "fsdp_on":
+            kwargs["fsdp"] = True
+        elif variant == "fsdp_off":
+            kwargs["fsdp"] = False
+        elif variant == "moe_ffshard":
+            kwargs["moe_ffshard"] = True
+        elif variant.startswith("mbff"):
+            kwargs["moe_ffshard"] = True
+            kwargs["microbatches"] = int(variant[4:])
+        else:
+            raise SystemExit(f"unknown variant {variant}")
+        rec = measure(cfg, cell, mesh, **kwargs)
+        rec.update(arch=args.arch, shape=args.shape, mesh=args.mesh,
+                   variant=variant)
+        path = out_dir / f"{args.arch}__{args.shape}__{variant}.json"
+        path.write_text(json.dumps(rec, indent=1))
+        print(f"{args.arch},{args.shape},{variant},"
+              f"compute={rec['t_compute_ms']:.1f}ms,"
+              f"memory={rec['t_memory_ms']:.1f}ms,"
+              f"collective={rec['t_collective_ms']:.1f}ms,"
+              f"dominant={rec['dominant']},temp={rec['temp_gb']:.1f}GB",
+              flush=True)
+        jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

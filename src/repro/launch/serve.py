@@ -1,0 +1,84 @@
+"""Serving launcher: batched prefill + decode loop on the host mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..distributed.ctx import activation_sharding
+from ..models.registry import (decode_fn, forward_fn, init_params,
+                               make_decode_state)
+from .mesh import make_host_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_host_mesh()
+    rng = np.random.default_rng(args.seed)
+
+    with mesh, activation_sharding(mesh, seq_parallel=False):
+        params = init_params(cfg, jax.random.PRNGKey(args.seed))
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+            jnp.int32)
+
+        caches = make_decode_state(cfg, args.batch, args.cache_len,
+                                   s_src=args.prompt_len)
+        dfn = jax.jit(decode_fn(cfg))
+        if cfg.family == "encdec":
+            # encoder memory -> cross KV, then decode from BOS
+            from ..models.encdec import encode, precompute_cross_kv
+            src = jnp.asarray(rng.normal(
+                0, 1, (args.batch, args.prompt_len, cfg.d_model)),
+                jnp.float32)
+            memory = encode(params, src, cfg)
+            ck, cv = precompute_cross_kv(params, memory, cfg)
+            caches = caches._replace(cross_k=ck, cross_v=cv)
+            tok = jnp.zeros((args.batch, 1), jnp.int32)
+            start_pos = 0
+        else:
+            # teacher-forced prefill: feed prompt tokens one step at a time
+            # through the decode path (simple, exercises the cache), then
+            # greedy-generate.
+            tok = prompts[:, :1]
+            for t in range(args.prompt_len - 1):
+                _, caches = dfn(params, prompts[:, t:t + 1], caches,
+                                jnp.int32(t))
+            tok = prompts[:, -1:]
+            start_pos = args.prompt_len - 1
+
+        out_tokens = []
+        t0 = time.perf_counter()
+        for i in range(args.gen):
+            logits, caches = dfn(params, tok, caches,
+                                 jnp.int32(start_pos + i))
+            tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+            out_tokens.append(np.asarray(tok[:, 0]))
+        dt = time.perf_counter() - t0
+        gen = np.stack(out_tokens, axis=1)
+        print(f"generated {gen.shape} tokens in {dt*1e3:.1f} ms "
+              f"({args.gen*args.batch/dt:.1f} tok/s)")
+        print("sample:", gen[0][:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""GQA attention with RoPE, KV cache, and optional local window.
+
+Prefill/training uses the flash-attention Pallas kernel on TPU (jnp oracle
+elsewhere — identical numerics, see kernels/flash_attention). Decode is a
+single-query attention against the cache: memory-bound, expressed directly
+in jnp so XLA fuses the cache read with the dot.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import constrain
+from ..kernels.flash_attention.ref import attention_ref
+from .common import KeyGen, ModelConfig, leaf, rope
+
+USE_FLASH_KERNEL = False  # flipped on TPU backends by launch/train.py
+
+
+def init_attention(cfg: ModelConfig, kg: KeyGen) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": leaf((d, hq * dh), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "wk": leaf((d, hkv * dh), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "wv": leaf((d, hkv * dh), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "wo": leaf((hq * dh, d), cfg.dtype, abstract=kg.abstract, key=kg()),
+    }
+
+
+CHUNKED_KV_THRESHOLD = 2048
+KV_CHUNK = 1024
+# f32-accumulate with bf16 operands (TPU-native; no f32 materialization of
+# q or kv chunks). Toggleable for the §Perf A/B (launch/perf.py).
+BF16_ATTENTION_OPERANDS = True
+
+
+def _attend(q, k, v, *, window: Optional[int]) -> jax.Array:
+    """q: (b, hq, sq, dh); k, v: (b, hkv, skv, dh)."""
+    if USE_FLASH_KERNEL and window is None and q.shape[2] > 1:
+        from ..kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=True)
+    group = q.shape[1] // k.shape[1]
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    if k.shape[2] > CHUNKED_KV_THRESHOLD:
+        return _attend_chunked(q, k, v, window=window)
+    return attention_ref(q, k, v, causal=True, window=window)
+
+
+def mha_attend(q, k, v, *, causal: bool) -> jax.Array:
+    """Shared attention entry for the enc-dec stacks (bidirectional
+    encoder / cross-attention or causal decoder self-attention); routes
+    long sequences through the streaming-softmax path so the (sq, skv)
+    logits never materialize."""
+    group = q.shape[1] // k.shape[1]
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    if k.shape[2] > CHUNKED_KV_THRESHOLD:
+        return _attend_chunked(q, k, v, window=None, causal=causal)
+    return attention_ref(q, k, v, causal=causal, window=None)
+
+
+def _attend_chunked(q, k, v, *, window: Optional[int],
+                    kv_chunk: int = KV_CHUNK,
+                    causal: bool = True) -> jax.Array:
+    """Streaming-softmax attention in pure jnp (the flash algorithm as a
+    lax.scan over kv chunks). Never materializes the (sq, skv) logits —
+    peak temp is one (sq, kv_chunk) tile; valid on every backend, so the
+    dry-run's memory_analysis reflects the production kernel's footprint.
+    """
+    b, h, sq, dh = q.shape
+    skv = k.shape[2]
+    pad = (-skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nkc = k.shape[2] // kv_chunk
+    kc = k.reshape(b, h, nkc, kv_chunk, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, nkc, kv_chunk, dh).transpose(2, 0, 1, 3, 4)
+    scale = 1.0 / (dh ** 0.5)
+    qf = q if BF16_ATTENTION_OPERANDS else q.astype(jnp.float32)
+    rows = (jnp.arange(sq) + (skv - sq))[:, None]          # global q index
+
+    def step(carry, inputs):
+        m, l, acc, ci = carry
+        k_c, v_c = inputs
+        if BF16_ATTENTION_OPERANDS:
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf, k_c,
+                           preferred_element_type=jnp.float32) * scale
+        else:
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf,
+                           k_c.astype(jnp.float32)) * scale
+        cols = ci * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = (cols <= rows) if causal else (cols >= 0)
+        mask &= cols < skv
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        if BF16_ATTENTION_OPERANDS:
+            acc = acc * alpha + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_c.dtype), v_c,
+                preferred_element_type=jnp.float32)
+        else:
+            acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p,
+                                           v_c.astype(jnp.float32))
+        return (m_new, l, acc, ci + 1), None
+
+    m0 = jnp.full((b, h, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq, 1), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, jnp.int32(0)),
+                                     (kc, vc))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def attention(params: dict, x: jax.Array, cfg: ModelConfig,
+              positions: jax.Array,
+              cache: Optional[tuple[jax.Array, jax.Array]] = None,
+              cache_index: Optional[jax.Array] = None,
+              window: Optional[int] = None):
+    """x: (b, s, d). With ``cache`` (k, v) of shape (b, hkv, s_max, dh) and
+    ``cache_index`` (scalar insert position), runs decode/appending mode and
+    returns (out, new_cache); otherwise self-attention over x only."""
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = constrain((x @ params["wq"]).reshape(b, s, hq, dh), "bshd")
+    k = constrain((x @ params["wk"]).reshape(b, s, hkv, dh), "bshd_kv")
+    v = constrain((x @ params["wv"]).reshape(b, s, hkv, dh), "bshd_kv")
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = q.transpose(0, 2, 1, 3)          # (b, hq, s, dh)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    if cache is not None:
+        # decode: append this step's k/v at cache_index, attend to the
+        # valid prefix only (runtime-masked — slots past cache_index are
+        # zeros and must not leak into the softmax).
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, 0, cache_index, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, 0, cache_index, 0))
+        out = _decode_attend(q, ck, cv, kv_len=cache_index + s,
+                             window=window)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+        return out @ params["wo"], (ck, cv)
+
+    out = _attend(q, k, v, window=window)          # (b, hq, s, dh)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    return out @ params["wo"]
+
+
+def _decode_attend(q, k, v, *, kv_len, window: Optional[int]) -> jax.Array:
+    """Single-step (or short) decode attention with runtime valid length.
+
+    q: (b, hq, s, dh); k, v: (b, hkv, s_max, dh); kv_len: traced scalar —
+    number of valid cache slots. GQA is handled with a grouped einsum so
+    the kv cache is never head-replicated in memory (a ``jnp.repeat`` here
+    would materialize group× the cache — the dominant decode buffer).
+    """
+    b, hq, s, dh = q.shape
+    hkv, s_max = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, s, dh)
+    scale = 1.0 / (dh ** 0.5)
+    # f32 accumulation WITHOUT materializing an f32 copy of the cache
+    # (v.astype(f32) would stream + store the whole cache twice)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    ki = jnp.arange(s_max)[None, :]
+    qi = jnp.arange(s)[:, None] + (kv_len - s)     # global query positions
+    mask = ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, s, dh).astype(q.dtype)
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, s_max: int, n_layers: int,
+                  *, abstract: bool = False):
+    shape = (n_layers, batch, cfg.n_kv_heads, s_max, cfg.head_dim)
+    if abstract:
+        return (jax.ShapeDtypeStruct(shape, cfg.dtype),
+                jax.ShapeDtypeStruct(shape, cfg.dtype))
+    return (jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))

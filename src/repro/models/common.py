@@ -1,0 +1,165 @@
+"""Shared model-definition utilities (pure JAX, functional params-as-pytree).
+
+Conventions:
+* params are nested dicts of jnp arrays; per-layer params are STACKED on a
+  leading (n_layers,) axis and consumed by ``jax.lax.scan`` — one layer
+  trace regardless of depth (compile time stays flat in n_layers, which is
+  what makes the 94-layer Qwen3-MoE dry-run tractable);
+* ``abstract=True`` init builds jax.ShapeDtypeStruct trees (for
+  ``jit.lower`` dry-runs — no host allocation);
+* activations/params default to bf16 for full configs, f32 for smoke.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    # MoE
+    moe_experts: int = 0
+    moe_topk: int = 0
+    moe_capacity_factor: float = 1.25
+    # hybrid (RG-LRU) / local attention
+    window: Optional[int] = None         # local-attention width
+    rnn_width: Optional[int] = None      # RG-LRU recurrence width
+    hybrid_period: int = 3               # (R, R, A) repeating pattern
+    # ssm (RWKV6)
+    rwkv_head_dim: int = 64
+    # enc-dec
+    encoder_layers: int = 0              # 0 => decoder-only
+    # misc
+    rope_theta: float = 500_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    # modality frontend stub: inputs are precomputed embeddings, not ids
+    embed_frontend: bool = False
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (bounded attention state)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + layers)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family == "moe":
+            ffn = self.moe_experts * 3 * d * f + d * self.moe_experts
+        else:
+            ffn = 3 * d * f
+        qkvo = d * (self.n_heads * self.head_dim) * 2 + \
+            d * (self.n_kv_heads * self.head_dim) * 2
+        per_layer = ffn + qkvo + 2 * d
+        total = emb + self.n_layers * per_layer
+        if self.encoder_layers:
+            total += self.encoder_layers * per_layer
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top-k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_ffn = self.moe_topk * 3 * d * f
+        moe_ffn = self.moe_experts * 3 * d * f
+        return int(self.param_count() - self.n_layers * (moe_ffn - dense_ffn))
+
+
+def leaf(shape, dtype, *, abstract: bool, key=None, scale: float = 0.02):
+    if abstract:
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    if key is None:
+        raise ValueError("concrete init needs a key")
+    return (jax.random.normal(key, tuple(shape), jnp.float32) * scale
+            ).astype(dtype)
+
+
+class KeyGen:
+    """Splittable key source usable in abstract mode (keys unused)."""
+
+    def __init__(self, key: Optional[jax.Array], abstract: bool):
+        self._key = key
+        self.abstract = abstract
+
+    def __call__(self) -> Optional[jax.Array]:
+        if self.abstract:
+            return None
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale).astype(dt) * gamma.astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., s, h, d); positions: (s,) or (b, s)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs   # (..., s, half)
+    cos = jnp.cos(angles)[..., None, :]    # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+def stack_layers(init_one: Callable[[], PyTree], n: int,
+                 *, abstract: bool) -> PyTree:
+    """Stack per-layer param trees along a leading axis for lax.scan."""
+    layers = [init_one() for _ in range(n)]
+    if abstract:
+        return jax.tree.map(
+            lambda *ls: jax.ShapeDtypeStruct((n,) + tuple(ls[0].shape),
+                                             ls[0].dtype), *layers)
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *layers)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy in f32. logits: (b, s, v); labels: (b, s).
+
+    Vocab-parallel-safe form: the gold logit is selected with an iota
+    compare + masked reduce instead of a gather, so a vocab-sharded logits
+    tensor needs only a psum, never an all-gather (Megatron-style
+    vocab-parallel loss).
+    """
+    from ..distributed.ctx import constrain
+    logits = constrain(logits, "logits_v")
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    return jnp.mean(logz - gold)

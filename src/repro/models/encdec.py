@@ -1,0 +1,224 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The modality frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (b, s_src, d_model) — ``input_specs`` supplies
+them. Encoder blocks are bidirectional; decoder blocks are causal
+self-attention + cross-attention to the encoder output. Decode caches the
+self-attention KV (growing) and the cross-attention KV (computed once from
+the encoder output).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import constrain
+from .attention import init_attention, make_kv_cache, mha_attend
+from .common import (KeyGen, ModelConfig, cross_entropy_loss, leaf, rms_norm,
+                     rope, stack_layers)
+from .mlp import init_mlp, mlp
+
+
+def _init_enc_block(cfg: ModelConfig, kg: KeyGen) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+        "attn": init_attention(cfg, kg),
+        "ln2": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+        "ffn": init_mlp(cfg, kg),
+    }
+
+
+def _init_dec_block(cfg: ModelConfig, kg: KeyGen) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+        "self_attn": init_attention(cfg, kg),
+        "ln_x": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+        "cross_attn": init_attention(cfg, kg),
+        "ln2": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+        "ffn": init_mlp(cfg, kg),
+    }
+
+
+def init_encdec(cfg: ModelConfig, key: Optional[jax.Array] = None,
+                *, abstract: bool = False) -> dict:
+    kg = KeyGen(key if key is not None else (None if abstract else
+                                             jax.random.PRNGKey(0)), abstract)
+    d, v = cfg.d_model, cfg.vocab
+    return {
+        "embed": leaf((v, d), cfg.dtype, abstract=abstract, key=kg()),
+        "enc_layers": stack_layers(lambda: _init_enc_block(cfg, kg),
+                                   cfg.encoder_layers, abstract=abstract),
+        "dec_layers": stack_layers(lambda: _init_dec_block(cfg, kg),
+                                   cfg.n_layers, abstract=abstract),
+        "enc_norm": leaf((d,), jnp.float32, abstract=abstract, key=kg(), scale=1.0),
+        "final_norm": leaf((d,), jnp.float32, abstract=abstract, key=kg(), scale=1.0),
+        "lm_head": leaf((d, v), cfg.dtype, abstract=abstract, key=kg()),
+    }
+
+
+def _mha(p, xq, xkv, cfg, *, causal, q_pos, kv_pos):
+    """Generic attention: bidirectional (encoder/cross) or causal (self).
+    Shares the constrained + streaming-softmax machinery with the
+    decoder-only stack (see attention.py)."""
+    b, sq, d = xq.shape
+    skv = xkv.shape[1]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = constrain((xq @ p["wq"]).reshape(b, sq, hq, dh), "bshd")
+    k = constrain((xkv @ p["wk"]).reshape(b, skv, hkv, dh), "bshd_kv")
+    v = constrain((xkv @ p["wv"]).reshape(b, skv, hkv, dh), "bshd_kv")
+    q = rope(q, q_pos, cfg.rope_theta)
+    k = rope(k, kv_pos, cfg.rope_theta)
+    q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    out = mha_attend(q, k, v, causal=causal)
+    out = out.astype(xq.dtype).transpose(0, 2, 1, 3).reshape(b, sq, hq * dh)
+    return out @ p["wo"]
+
+
+def encode(params: dict, src_embeds: jax.Array, cfg: ModelConfig,
+           *, remat: bool = True) -> jax.Array:
+    """src_embeds: (b, s_src, d) from the (stubbed) modality frontend."""
+    x = src_embeds.astype(cfg.dtype)
+    pos = jnp.arange(x.shape[1])
+
+    def block(x, p):
+        x = constrain(x, "bsd")
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + _mha(p["attn"], h, h, cfg, causal=False, q_pos=pos,
+                     kv_pos=pos)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + mlp(p["ffn"], h2), None
+
+    fn = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward_encdec(params: dict, src_embeds: jax.Array,
+                   tgt_tokens: jax.Array, cfg: ModelConfig,
+                   *, remat: bool = True) -> jax.Array:
+    """Training forward -> logits (b, s_tgt, vocab)."""
+    memory = encode(params, src_embeds, cfg, remat=remat)
+    x = params["embed"][tgt_tokens]
+    pos_t = jnp.arange(x.shape[1])
+    pos_s = jnp.arange(memory.shape[1])
+
+    def block(x, p):
+        x = constrain(x, "bsd")
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + _mha(p["self_attn"], h, h, cfg, causal=True, q_pos=pos_t,
+                     kv_pos=pos_t)
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        x = x + _mha(p["cross_attn"], hx, memory, cfg, causal=False,
+                     q_pos=pos_t, kv_pos=pos_s)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + mlp(p["ffn"], h2), None
+
+    fn = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(fn, x, params["dec_layers"])
+    x = constrain(x, "bsd")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return constrain(x @ params["lm_head"], "logits_v")
+
+
+def encdec_loss(params: dict, batch: dict, cfg: ModelConfig,
+                *, remat: bool = True) -> jax.Array:
+    logits = forward_encdec(params, batch["src_embeds"], batch["tokens"],
+                            cfg, remat=remat)
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+class EncDecCaches(NamedTuple):
+    self_kv: tuple          # (L, b, hkv, s_max, dh) x2
+    cross_k: jax.Array      # (L, b, hkv, s_src, dh)
+    cross_v: jax.Array
+    memory_pos: jax.Array   # (s_src,)
+
+
+def make_encdec_caches(cfg: ModelConfig, batch: int, s_max: int, s_src: int,
+                       *, abstract: bool = False) -> EncDecCaches:
+    kv = make_kv_cache(cfg, batch, s_max, cfg.n_layers, abstract=abstract)
+    cshape = (cfg.n_layers, batch, cfg.n_kv_heads, s_src, cfg.head_dim)
+    if abstract:
+        ck = jax.ShapeDtypeStruct(cshape, cfg.dtype)
+        cv = jax.ShapeDtypeStruct(cshape, cfg.dtype)
+        mp = jax.ShapeDtypeStruct((s_src,), jnp.int32)
+    else:
+        ck = jnp.zeros(cshape, cfg.dtype)
+        cv = jnp.zeros(cshape, cfg.dtype)
+        mp = jnp.arange(s_src, dtype=jnp.int32)
+    return EncDecCaches(self_kv=kv, cross_k=ck, cross_v=cv, memory_pos=mp)
+
+
+def decode_step_encdec(params: dict, tokens: jax.Array,
+                       caches: EncDecCaches, pos: jax.Array,
+                       cfg: ModelConfig) -> tuple[jax.Array, EncDecCaches]:
+    """One decoder step against precomputed cross-attention KV."""
+    from .attention import _decode_attend
+
+    x = params["embed"][tokens]
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def block(x, inputs):
+        p, k_l, v_l, ck_l, cv_l = inputs
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = rope((h @ p["self_attn"]["wq"]).reshape(b, s, hq, dh), pos[None],
+                 cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = rope((h @ p["self_attn"]["wk"]).reshape(b, s, hkv, dh), pos[None],
+                 cfg.rope_theta).transpose(0, 2, 1, 3)
+        v = (h @ p["self_attn"]["wv"]).reshape(b, s, hkv, dh
+                                               ).transpose(0, 2, 1, 3)
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype),
+                                           (0, 0, pos, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype),
+                                           (0, 0, pos, 0))
+        out = _decode_attend(q, k_l, v_l, kv_len=pos + s, window=None)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+        x = x + out @ p["self_attn"]["wo"]
+        # cross attention against fixed memory
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        qx = rope((hx @ p["cross_attn"]["wq"]).reshape(b, s, hq, dh),
+                  pos[None], cfg.rope_theta).transpose(0, 2, 1, 3)
+        group = hq // hkv
+        ck = jnp.repeat(ck_l, group, axis=1) if group > 1 else ck_l
+        cv = jnp.repeat(cv_l, group, axis=1) if group > 1 else cv_l
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qx, ck).astype(jnp.float32) \
+            / (dh ** 0.5)
+        probs = jax.nn.softmax(logits, axis=-1)
+        outx = jnp.einsum("bhqk,bhkd->bhqd", probs, cv.astype(jnp.float32))
+        outx = outx.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+        x = x + outx @ p["cross_attn"]["wo"]
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp(p["ffn"], h2)
+        return x, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        lambda c, i: block(c, i), x,
+        (params["dec_layers"], caches.self_kv[0], caches.self_kv[1],
+         caches.cross_k, caches.cross_v))
+    caches = caches._replace(self_kv=(k_new, v_new))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["lm_head"], caches
+
+
+def precompute_cross_kv(params: dict, memory: jax.Array, cfg: ModelConfig
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Cross-attention K/V for all decoder layers from encoder output."""
+    b, s_src, d = memory.shape
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.arange(s_src)
+
+    def one(p):
+        k = rope((memory @ p["cross_attn"]["wk"]).reshape(b, s_src, hkv, dh),
+                 pos, cfg.rope_theta).transpose(0, 2, 1, 3)
+        v = (memory @ p["cross_attn"]["wv"]).reshape(b, s_src, hkv, dh
+                                                     ).transpose(0, 2, 1, 3)
+        return k, v
+
+    ks, vs = jax.vmap(one)(params["dec_layers"])
+    return ks, vs

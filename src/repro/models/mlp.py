@@ -1,0 +1,24 @@
+"""Dense SwiGLU feed-forward block."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, ModelConfig, leaf
+
+
+def init_mlp(cfg: ModelConfig, kg: KeyGen, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    return {
+        "w_gate": leaf((d, f), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "w_up": leaf((d, f), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "w_down": leaf((f, d), cfg.dtype, abstract=kg.abstract, key=kg()),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    up = (x @ params["w_up"]).astype(jnp.float32)
+    return ((gate * up).astype(x.dtype)) @ params["w_down"]

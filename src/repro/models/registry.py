@@ -1,0 +1,47 @@
+"""Model registry: family-dispatching build/apply functions."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import encdec, transformer
+from .common import ModelConfig
+
+
+def init_params(cfg: ModelConfig, key: Optional[jax.Array] = None,
+                *, abstract: bool = False):
+    if cfg.family == "encdec":
+        return encdec.init_encdec(cfg, key, abstract=abstract)
+    return transformer.init_lm(cfg, key, abstract=abstract)
+
+
+def loss_fn(cfg: ModelConfig):
+    """(params, batch) -> scalar loss, matching the family's batch schema."""
+    if cfg.family == "encdec":
+        return lambda p, b: encdec.encdec_loss(p, b, cfg)
+    return lambda p, b: transformer.lm_loss(p, b, cfg)
+
+
+def forward_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return lambda p, b: encdec.forward_encdec(
+            p, b["src_embeds"], b["tokens"], cfg)
+    return lambda p, b: transformer.forward(p, b["tokens"], cfg)
+
+
+def make_decode_state(cfg: ModelConfig, batch: int, s_max: int,
+                      *, s_src: int = 0, abstract: bool = False):
+    if cfg.family == "encdec":
+        return encdec.make_encdec_caches(cfg, batch, s_max, s_src or 128,
+                                         abstract=abstract)
+    return transformer.make_decode_caches(cfg, batch, s_max,
+                                          abstract=abstract)
+
+
+def decode_fn(cfg: ModelConfig):
+    """(params, tokens, caches, pos) -> (logits, caches)."""
+    if cfg.family == "encdec":
+        return lambda p, t, c, pos: encdec.decode_step_encdec(p, t, c, pos, cfg)
+    return lambda p, t, c, pos: transformer.decode_step(p, t, c, pos, cfg)

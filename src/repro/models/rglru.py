@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Real-Gated Linear Recurrent Unit over a width-``rnn_width`` channel state:
+
+    r_t = sigmoid(W_r x_t + b_r)           (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)           (input gate)
+    a_t = a^(c * r_t)   with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is a diagonal affine map, hence ASSOCIATIVE — training and
+prefill run it with ``jax.lax.associative_scan`` (log-depth, TPU-friendly),
+decode with a single fused step. Used inside the Griffin residual block:
+conv1d(width 4) -> RG-LRU -> gated output projection, alternating with
+local sliding-window attention in a (R, R, A) pattern.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, ModelConfig, leaf
+
+_C = 8.0
+
+
+class RglruState(NamedTuple):
+    h: jax.Array          # (b, w) recurrent state
+    conv: jax.Array       # (b, 3, w) last conv inputs (kernel 4)
+
+
+def init_rglru(cfg: ModelConfig, kg: KeyGen) -> dict:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    return {
+        "w_in": leaf((d, w), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "w_gate_in": leaf((d, w), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "conv_k": leaf((4, w), cfg.dtype, abstract=kg.abstract, key=kg(),
+                       scale=0.2),
+        "w_r": leaf((w, w), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "w_i": leaf((w, w), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "lam": leaf((w,), jnp.float32, abstract=kg.abstract, key=kg(),
+                    scale=1.0),
+        "w_out": leaf((w, d), cfg.dtype, abstract=kg.abstract, key=kg()),
+    }
+
+
+def _gates(params, u):
+    """u: (b, s, w) post-conv activations -> (a, gated_in) f32."""
+    r = jax.nn.sigmoid((u @ params["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_i"]).astype(jnp.float32))
+    log_a0 = jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    log_a = _C * r * log_a0[None, None, :]           # (b, s, w), <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, beta * i * u.astype(jnp.float32)
+
+
+def _conv(params, u, carry):
+    """Causal conv1d width 4. u: (b, s, w); carry: (b, 3, w)."""
+    ext = jnp.concatenate([carry.astype(u.dtype), u], axis=1)
+    k = params["conv_k"]
+    out = (ext[:, 3:] * k[3] + ext[:, 2:-1] * k[2] +
+           ext[:, 1:-2] * k[1] + ext[:, :-3] * k[0])
+    return out, ext[:, -3:]
+
+
+def rglru_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                state: RglruState) -> tuple[jax.Array, RglruState]:
+    """Griffin recurrent residual branch. x: (b, s, d)."""
+    u = x @ params["w_in"]                           # (b, s, w)
+    gate = jax.nn.gelu((x @ params["w_gate_in"]).astype(jnp.float32))
+    u, conv_carry = _conv(params, u, state.conv)
+    a, bx = _gates(params, u)
+
+    # associative scan over the diagonal affine recurrence
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    h0 = state.h.astype(jnp.float32)
+    # fold h0 into the first element
+    bx = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+    a_scan, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    out = (h * gate).astype(x.dtype) @ params["w_out"]
+    return out, RglruState(h=h[:, -1, :].astype(state.h.dtype),
+                           conv=conv_carry)
+
+
+def rglru_step(params: dict, x: jax.Array, cfg: ModelConfig,
+               state: RglruState) -> tuple[jax.Array, RglruState]:
+    """Single-token decode. x: (b, 1, d)."""
+    u = x @ params["w_in"]
+    gate = jax.nn.gelu((x @ params["w_gate_in"]).astype(jnp.float32))
+    u, conv_carry = _conv(params, u, state.conv)
+    a, bx = _gates(params, u)
+    h = a[:, 0] * state.h.astype(jnp.float32) + bx[:, 0]
+    out = (h[:, None, :] * gate).astype(x.dtype) @ params["w_out"]
+    return out, RglruState(h=h.astype(state.h.dtype), conv=conv_carry)
+
+
+def make_rglru_state(cfg: ModelConfig, batch: int, n_layers: int,
+                     *, abstract: bool = False) -> RglruState:
+    w = cfg.rnn_width or cfg.d_model
+    h_shape = (n_layers, batch, w)
+    c_shape = (n_layers, batch, 3, w)
+    if abstract:
+        return RglruState(jax.ShapeDtypeStruct(h_shape, jnp.float32),
+                          jax.ShapeDtypeStruct(c_shape, cfg.dtype))
+    return RglruState(jnp.zeros(h_shape, jnp.float32),
+                      jnp.zeros(c_shape, cfg.dtype))

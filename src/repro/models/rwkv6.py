@@ -1,0 +1,211 @@
+"""RWKV-6 "Finch" time-mix / channel-mix blocks (attention-free).
+
+Recurrence (per head, d_k × d_v state S):
+
+    S_t = diag(w_t) · S_{t-1} + kᵀ_t v_t
+    o_t = r_t · (S_{t-1} + diag(u) kᵀ_t v_t)
+
+with data-dependent decay w_t = exp(-exp(w_lora(x_t))) — the Finch change
+over RWKV-5's static decay. Two execution forms:
+
+* ``chunked`` (training/prefill): the affine diagonal recurrence is
+  associative, so the sequence is processed in chunks — within a chunk an
+  O(C²) masked-decay attention-like form (MXU matmuls), across chunks the
+  carried state. Wall-clock parallel over the sequence.
+* ``step`` (decode): O(1) per token — the reason rwkv6 runs the long_500k
+  shape with a fixed-size state instead of a 500k KV cache.
+
+Token-shift (the x_{t-1} mix) is implemented with a roll within the
+sequence and a carried last-token for decode.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, ModelConfig, leaf
+
+
+class RwkvState(NamedTuple):
+    s: jax.Array        # (b, h, dk, dv) wkv state
+    x_prev: jax.Array   # (b, d) last token (for token-shift)
+
+
+def init_rwkv_time_mix(cfg: ModelConfig, kg: KeyGen) -> dict:
+    d = cfg.d_model
+    return {
+        "mix_r": leaf((d,), cfg.dtype, abstract=kg.abstract, key=kg(), scale=0.5),
+        "mix_k": leaf((d,), cfg.dtype, abstract=kg.abstract, key=kg(), scale=0.5),
+        "mix_v": leaf((d,), cfg.dtype, abstract=kg.abstract, key=kg(), scale=0.5),
+        "mix_w": leaf((d,), cfg.dtype, abstract=kg.abstract, key=kg(), scale=0.5),
+        "wr": leaf((d, d), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "wk": leaf((d, d), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "wv": leaf((d, d), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "wo": leaf((d, d), cfg.dtype, abstract=kg.abstract, key=kg()),
+        # decay LoRA: d -> 64 -> d (data-dependent decay, the Finch core)
+        "w_lora_a": leaf((d, 64), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "w_lora_b": leaf((64, d), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "w_bias": leaf((d,), cfg.dtype, abstract=kg.abstract, key=kg(), scale=0.5),
+        "u_bonus": leaf((d,), cfg.dtype, abstract=kg.abstract, key=kg(), scale=0.5),
+    }
+
+
+def _project(params, x, x_shift):
+    """Token-shifted projections. x, x_shift: (b, s, d)."""
+    def mix(name):
+        m = params[f"mix_{name}"].astype(jnp.float32)
+        return (x * (1 - m) + x_shift * m).astype(x.dtype)
+    r = mix("r") @ params["wr"]
+    k = mix("k") @ params["wk"]
+    v = mix("v") @ params["wv"]
+    w_in = mix("w") @ params["w_lora_a"]
+    w_log = (jnp.tanh(w_in.astype(jnp.float32)) @
+             params["w_lora_b"].astype(jnp.float32)) + \
+        params["w_bias"].astype(jnp.float32)
+    # per-step log-decay in [-0.5, ~0): the floor bounds the factored
+    # exponentials of the chunked form (exp(+cum) stays <= e^(0.5*chunk)),
+    # and both execution forms share the same clamp so they stay equal.
+    logw = jnp.maximum(-jnp.exp(jnp.clip(w_log, -12.0, 4.0)), -0.5)
+    return r, k, v, logw
+
+
+def _split_heads(x, h, dh):
+    b, s, _ = x.shape
+    return x.reshape(b, s, h, dh).transpose(0, 2, 1, 3)   # (b, h, s, dh)
+
+
+def rwkv_time_mix_chunked(params: dict, x: jax.Array, cfg: ModelConfig,
+                          state: RwkvState, chunk: int = 64
+                          ) -> tuple[jax.Array, RwkvState]:
+    """Chunked-parallel form. x: (b, s, d) with s % chunk == 0."""
+    b, s, d = x.shape
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    x_shift = jnp.concatenate([state.x_prev[:, None, :], x[:, :-1]], axis=1)
+    r, k, v, logw = _project(params, x, x_shift)
+    u = params["u_bonus"].astype(jnp.float32).reshape(h, 1, dh)
+
+    # operands stay in the model dtype; decays are derived PER CHUNK inside
+    # the scan (no full-sequence f32 materialization of r/k/v/cum — at 32k
+    # context those five f32 copies were ~5 GB/layer/device of pure HBM
+    # traffic, the dominant term of the rwkv prefill roofline).
+    r = _split_heads(r, h, dh)
+    k = _split_heads(k, h, dh)
+    v = _split_heads(v, h, dh)
+    logw = _split_heads(logw, h, dh)                      # (b, h, s, dh) f32
+
+    nc = s // chunk
+    rc = r.reshape(b, h, nc, chunk, dh)
+    kc = k.reshape(b, h, nc, chunk, dh)
+    vc = v.reshape(b, h, nc, chunk, dh)
+    lw = logw.reshape(b, h, nc, chunk, dh)
+
+    def chunk_step(S, inputs):
+        rc_, kc_, vc_, lw_ = inputs                       # (b,h,chunk,dh)
+        cum_ = jnp.cumsum(lw_, axis=2)                    # inclusive
+        cumex_ = cum_ - lw_                               # exclusive
+        total_ = cum_[:, :, -1, :]
+        dt = rc_.dtype
+        # contribution of the carried state: r_t decayed from chunk start
+        r_dec = rc_ * jnp.exp(cumex_).astype(dt)
+        out_state = jnp.einsum("bhtk,bhkv->bhtv", r_dec.astype(jnp.float32),
+                               S)
+        # intra-chunk: pair (t, j<t) with decay prod_(j+1..t-1); factored
+        # as exp(cumex_t) * exp(-cum_j), safe under the -0.5 log-decay floor
+        att = jnp.einsum("bhtk,bhsk->bhts", r_dec,
+                         kc_ * jnp.exp(-cum_).astype(dt),
+                         preferred_element_type=jnp.float32)
+        mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+        att = att * mask
+        out_intra = jnp.einsum("bhts,bhsv->bhtv", att.astype(dt), vc_,
+                               preferred_element_type=jnp.float32)
+        # bonus diagonal term u ⊙ k_t v_t
+        out_diag = jnp.einsum(
+            "bhtk,bhtk->bht", rc_.astype(jnp.float32),
+            kc_.astype(jnp.float32) * u[None])[..., None] \
+            * vc_.astype(jnp.float32)
+        # state update: S' = diag(total decay) S + sum_t decay_rest k v
+        k_tail = kc_ * jnp.exp(total_[:, :, None, :] - cum_).astype(dt)
+        S_new = S * jnp.exp(total_)[:, :, :, None] + \
+            jnp.einsum("bhtk,bhtv->bhkv", k_tail, vc_,
+                       preferred_element_type=jnp.float32)
+        return S_new, out_state + out_intra + out_diag
+
+    S0 = state.s.astype(jnp.float32)
+    S_fin, outs = jax.lax.scan(
+        chunk_step, S0,
+        (rc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+         vc.transpose(2, 0, 1, 3, 4), lw.transpose(2, 0, 1, 3, 4)))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dh)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    out = out @ params["wo"]
+    return out, RwkvState(s=S_fin.astype(state.s.dtype), x_prev=x[:, -1, :])
+
+
+def rwkv_time_mix_step(params: dict, x: jax.Array, cfg: ModelConfig,
+                       state: RwkvState) -> tuple[jax.Array, RwkvState]:
+    """Single-token decode. x: (b, 1, d) -> (b, 1, d), O(1) state update."""
+    b, _, d = x.shape
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    x_shift = state.x_prev[:, None, :]
+    r, k, v, logw = _project(params, x, x_shift)
+    u = params["u_bonus"].astype(jnp.float32).reshape(h, dh)
+
+    r = r.reshape(b, h, dh).astype(jnp.float32)
+    k = k.reshape(b, h, dh).astype(jnp.float32)
+    v = v.reshape(b, h, dh).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(b, h, dh))
+
+    S = state.s.astype(jnp.float32)                        # (b, h, dk, dv)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum("bhk,bhkv->bhv", r, S + u[None, :, :, None] * kv)
+    S_new = S * w[..., None] + kv
+    out = out.reshape(b, 1, d).astype(x.dtype) @ params["wo"]
+    return out, RwkvState(s=S_new.astype(state.s.dtype), x_prev=x[:, -1, :])
+
+
+def make_rwkv_state(cfg: ModelConfig, batch: int, n_layers: int,
+                    *, abstract: bool = False) -> RwkvState:
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    s_shape = (n_layers, batch, h, dh, dh)
+    x_shape = (n_layers, batch, d)
+    if abstract:
+        return RwkvState(jax.ShapeDtypeStruct(s_shape, jnp.float32),
+                         jax.ShapeDtypeStruct(x_shape, cfg.dtype))
+    return RwkvState(jnp.zeros(s_shape, jnp.float32),
+                     jnp.zeros(x_shape, cfg.dtype))
+
+
+def init_rwkv_channel_mix(cfg: ModelConfig, kg: KeyGen) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mix_k": leaf((d,), cfg.dtype, abstract=kg.abstract, key=kg(), scale=0.5),
+        "mix_r": leaf((d,), cfg.dtype, abstract=kg.abstract, key=kg(), scale=0.5),
+        "wk": leaf((d, f), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "wv": leaf((f, d), cfg.dtype, abstract=kg.abstract, key=kg()),
+        "wr": leaf((d, d), cfg.dtype, abstract=kg.abstract, key=kg()),
+    }
+
+
+def rwkv_channel_mix(params: dict, x: jax.Array, x_prev: jax.Array
+                     ) -> tuple[jax.Array, jax.Array]:
+    """RWKV squared-ReLU channel mix with token shift.
+
+    x: (b, s, d); x_prev: (b, d) carried last token. Returns (out, new_prev).
+    """
+    x_shift = jnp.concatenate([x_prev[:, None, :], x[:, :-1]], axis=1)
+
+    def mix(name):
+        m = params[f"mix_{name}"].astype(jnp.float32)
+        return (x * (1 - m) + x_shift * m).astype(x.dtype)
+
+    k = jnp.square(jax.nn.relu((mix("k") @ params["wk"]).astype(jnp.float32)))
+    r = jax.nn.sigmoid((mix("r") @ params["wr"]).astype(jnp.float32))
+    out = (r * (k.astype(x.dtype) @ params["wv"]).astype(jnp.float32))
+    return out.astype(x.dtype), x[:, -1, :]

@@ -1,0 +1,361 @@
+"""Decoder-only LM assembly for dense / MoE / SSM (RWKV6) / hybrid (Griffin).
+
+Per-layer parameters are stacked on a leading (n_layers,) axis and the
+layer stack runs under ``jax.lax.scan`` (+ optional ``jax.checkpoint``
+remat), so trace/compile cost is depth-independent. Hybrid models scan over
+(R, R, A) super-blocks with a remainder tail.
+
+Decode paths thread explicit caches/states: KV cache for attention
+families, RWKV state for ssm, RG-LRU state + ring-buffer local-attention
+cache for hybrid — the ring buffer is why recurrentgemma's decode cost is
+identical at 32 k and 500 k context.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import constrain
+from .attention import attention, init_attention, make_kv_cache
+from .common import (KeyGen, ModelConfig, cross_entropy_loss, leaf, rms_norm,
+                     stack_layers)
+from .mlp import init_mlp, mlp
+from .moe import init_moe, moe
+from .rglru import (RglruState, init_rglru, make_rglru_state, rglru_block,
+                    rglru_step)
+from .rwkv6 import (RwkvState, init_rwkv_channel_mix, init_rwkv_time_mix,
+                    make_rwkv_state, rwkv_channel_mix, rwkv_time_mix_chunked,
+                    rwkv_time_mix_step)
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ModelConfig, kg: KeyGen) -> dict:
+    d = cfg.d_model
+    block = {
+        "ln1": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+        "ln2": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+    }
+    if cfg.family == "moe":
+        block["attn"] = init_attention(cfg, kg)
+        block["ffn"] = init_moe(cfg, kg)
+    elif cfg.family == "ssm":
+        block["tm"] = init_rwkv_time_mix(cfg, kg)
+        block["cm"] = init_rwkv_channel_mix(cfg, kg)
+    else:  # dense
+        block["attn"] = init_attention(cfg, kg)
+        block["ffn"] = init_mlp(cfg, kg)
+    return block
+
+
+def _init_hybrid_super(cfg: ModelConfig, kg: KeyGen) -> dict:
+    """(R, R, A) super-block for Griffin-style hybrids."""
+    d = cfg.d_model
+
+    def rec():
+        return {
+            "ln": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+            "rglru": init_rglru(cfg, kg),
+            "ln_ffn": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+            "ffn": init_mlp(cfg, kg),
+        }
+
+    return {
+        "r0": rec(),
+        "r1": rec(),
+        "attn": {
+            "ln": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+            "attn": init_attention(cfg, kg),
+            "ln_ffn": leaf((d,), jnp.float32, abstract=kg.abstract, key=kg(), scale=1.0),
+            "ffn": init_mlp(cfg, kg),
+        },
+    }
+
+
+def init_lm(cfg: ModelConfig, key: Optional[jax.Array] = None,
+            *, abstract: bool = False) -> dict:
+    kg = KeyGen(key if key is not None else (None if abstract else
+                                             jax.random.PRNGKey(0)), abstract)
+    d, v = cfg.d_model, cfg.vocab
+    params: dict[str, Any] = {
+        "embed": leaf((v, d), cfg.dtype, abstract=abstract, key=kg()),
+        "final_norm": leaf((d,), jnp.float32, abstract=abstract, key=kg(),
+                           scale=1.0),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = leaf((d, v), cfg.dtype, abstract=abstract, key=kg())
+    if cfg.family == "hybrid":
+        n_super, rem = divmod(cfg.n_layers, 3)
+        params["supers"] = stack_layers(
+            lambda: _init_hybrid_super(cfg, kg), n_super, abstract=abstract)
+        params["tail"] = stack_layers(
+            lambda: _init_hybrid_super(cfg, kg)["r0"], rem, abstract=abstract) \
+            if rem else {}
+    else:
+        params["layers"] = stack_layers(
+            lambda: _init_block(cfg, kg), cfg.n_layers, abstract=abstract)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill, no cache)
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(cfg: ModelConfig, layer: dict, x: jax.Array,
+               positions: jax.Array) -> jax.Array:
+    x = constrain(x, "bsd_batch_only" if cfg.family == "ssm" else "bsd")
+    h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        b, s, d = x.shape
+        st = RwkvState(
+            s=jnp.zeros((b, d // cfg.rwkv_head_dim, cfg.rwkv_head_dim,
+                         cfg.rwkv_head_dim), jnp.float32),
+            x_prev=jnp.zeros((b, d), x.dtype))
+        out, _ = rwkv_time_mix_chunked(layer["tm"], h, cfg, st)
+        x = x + out
+        h2 = rms_norm(x, layer["ln2"], cfg.norm_eps)
+        out2, _ = rwkv_channel_mix(layer["cm"], h2,
+                                   jnp.zeros((b, d), x.dtype))
+        return x + out2
+    att = attention(layer["attn"], h, cfg, positions, window=cfg.window
+                    if cfg.family == "hybrid" else None)
+    x = x + att
+    h2 = rms_norm(x, layer["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        return x + moe(layer["ffn"], h2, cfg)
+    return x + mlp(layer["ffn"], h2)
+
+
+def _rec_fwd(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    x = constrain(x, "bsd")
+    b = x.shape[0]
+    w = cfg.rnn_width or cfg.d_model
+    st = RglruState(h=jnp.zeros((b, w), jnp.float32),
+                    conv=jnp.zeros((b, 3, w), x.dtype))
+    out, _ = rglru_block(p["rglru"], rms_norm(x, p["ln"], cfg.norm_eps),
+                         cfg, st)
+    x = x + out
+    return x + mlp(p["ffn"], rms_norm(x, p["ln_ffn"], cfg.norm_eps))
+
+
+def _attn_fwd(cfg: ModelConfig, p: dict, x: jax.Array,
+              positions: jax.Array) -> jax.Array:
+    out = attention(p["attn"], rms_norm(x, p["ln"], cfg.norm_eps), cfg,
+                    positions, window=cfg.window)
+    x = x + out
+    return x + mlp(p["ffn"], rms_norm(x, p["ln_ffn"], cfg.norm_eps))
+
+
+def forward(params: dict, tokens_or_embeds: jax.Array, cfg: ModelConfig,
+            *, remat: bool = True) -> jax.Array:
+    """Full-sequence forward -> logits (b, s, vocab)."""
+    if cfg.embed_frontend and tokens_or_embeds.ndim == 3:
+        x = tokens_or_embeds.astype(cfg.dtype)
+    else:
+        x = params["embed"][tokens_or_embeds]
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+
+    if cfg.family == "hybrid":
+        def super_fwd(x, p):
+            x = _rec_fwd(cfg, p["r0"], x)
+            x = _rec_fwd(cfg, p["r1"], x)
+            x = _attn_fwd(cfg, p["attn"], x, positions)
+            return x, None
+        fn = jax.checkpoint(super_fwd) if remat else super_fwd
+        x, _ = jax.lax.scan(fn, x, params["supers"])
+        if params.get("tail"):
+            def tail_fwd(x, p):
+                return _rec_fwd(cfg, p, x), None
+            x, _ = jax.lax.scan(tail_fwd, x, params["tail"])
+    else:
+        def layer_fwd(x, layer):
+            return _block_fwd(cfg, layer, x, positions), None
+        fn = jax.checkpoint(layer_fwd) if remat else layer_fwd
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+
+    x = constrain(x, "bsd")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return constrain(x @ head, "logits_v")
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig,
+            *, remat: bool = True) -> jax.Array:
+    logits = forward(params, batch["tokens"], cfg, remat=remat)
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, explicit caches)
+# ---------------------------------------------------------------------------
+
+
+class DecodeCaches(NamedTuple):
+    kv: Optional[tuple] = None            # stacked KV cache(s)
+    rwkv: Optional[RwkvState] = None      # stacked rwkv states
+    cm_prev: Optional[jax.Array] = None   # (L, b, d) channel-mix shift
+    rglru: Optional[RglruState] = None    # stacked rglru states
+    ring_pos: Optional[jax.Array] = None  # (L_attn, window) global positions
+
+
+def make_decode_caches(cfg: ModelConfig, batch: int, s_max: int,
+                       *, abstract: bool = False) -> DecodeCaches:
+    if cfg.family == "ssm":
+        st = make_rwkv_state(cfg, batch, cfg.n_layers, abstract=abstract)
+        shape = (cfg.n_layers, batch, cfg.d_model)
+        cm = (jax.ShapeDtypeStruct(shape, cfg.dtype) if abstract
+              else jnp.zeros(shape, cfg.dtype))
+        return DecodeCaches(rwkv=st, cm_prev=cm)
+    if cfg.family == "hybrid":
+        n_super, rem = divmod(cfg.n_layers, 3)
+        n_rec = 2 * n_super + rem
+        win = min(cfg.window or s_max, s_max)
+        kv = make_kv_cache(cfg, batch, win, n_super, abstract=abstract)
+        rg = make_rglru_state(cfg, batch, n_rec, abstract=abstract)
+        rp_shape = (n_super, win)
+        rp = (jax.ShapeDtypeStruct(rp_shape, jnp.int32) if abstract
+              else jnp.full(rp_shape, -1, jnp.int32))
+        return DecodeCaches(kv=kv, rglru=rg, ring_pos=rp)
+    kv = make_kv_cache(cfg, batch, s_max, cfg.n_layers, abstract=abstract)
+    return DecodeCaches(kv=kv)
+
+
+def _decode_block(cfg, layer, x, kv_l, pos):
+    """One dense/moe layer decode step. kv_l: (k, v) for this layer."""
+    h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+    out, kv_l = attention(layer["attn"], h, cfg, pos[None],
+                          cache=kv_l, cache_index=pos)
+    x = x + out
+    h2 = rms_norm(x, layer["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + moe(layer["ffn"], h2, cfg)
+    else:
+        x = x + mlp(layer["ffn"], h2)
+    return x, kv_l
+
+
+def decode_step(params: dict, tokens: jax.Array, caches: DecodeCaches,
+                pos: jax.Array, cfg: ModelConfig
+                ) -> tuple[jax.Array, DecodeCaches]:
+    """One decode step. tokens: (b, 1) int32 (or (b, 1, d) embeds);
+    pos: scalar int32 — current global position (cache insert index)."""
+    if cfg.embed_frontend and tokens.ndim == 3:
+        x = tokens.astype(cfg.dtype)
+    else:
+        x = params["embed"][tokens]
+
+    if cfg.family == "ssm":
+        def step(x, inputs):
+            layer, st_s, st_x, cm_prev = inputs
+            h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+            out, st = rwkv_time_mix_step(layer["tm"], h, cfg,
+                                         RwkvState(st_s, st_x))
+            x = x + out
+            h2 = rms_norm(x, layer["ln2"], cfg.norm_eps)
+            out2, cm_new = rwkv_channel_mix(layer["cm"], h2, cm_prev)
+            return x + out2, (st.s, st.x_prev, cm_new)
+        x, (s_new, xp_new, cm_new) = jax.lax.scan(
+            lambda c, i: step(c, i), x,
+            (params["layers"], caches.rwkv.s, caches.rwkv.x_prev,
+             caches.cm_prev))
+        caches = caches._replace(rwkv=RwkvState(s_new, xp_new),
+                                 cm_prev=cm_new)
+    elif cfg.family == "hybrid":
+        x, caches = _decode_hybrid(params, x, caches, pos, cfg)
+    else:
+        def step(x, inputs):
+            layer, k_l, v_l = inputs
+            x, (k_l, v_l) = _decode_block(cfg, layer, x, (k_l, v_l), pos)
+            return x, (k_l, v_l)
+        x, (k_new, v_new) = jax.lax.scan(
+            lambda c, i: step(c, i), x,
+            (params["layers"], caches.kv[0], caches.kv[1]))
+        caches = caches._replace(kv=(k_new, v_new))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, caches
+
+
+def _decode_hybrid(params, x, caches: DecodeCaches, pos, cfg):
+    """Hybrid decode: scan supers; local attention uses a ring buffer."""
+    win = caches.kv[0].shape[3]
+    slot = pos % win
+
+    def rec_step(x, p, st_h, st_c):
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        out, st = rglru_step(p["rglru"], h, cfg, RglruState(st_h, st_c))
+        x = x + out
+        x = x + mlp(p["ffn"], rms_norm(x, p["ln_ffn"], cfg.norm_eps))
+        return x, st
+
+    def super_step(x, inputs):
+        p, k_l, v_l, rp, h0, c0, h1, c1 = inputs
+        x, st0 = rec_step(x, p["r0"], h0, c0)
+        x, st1 = rec_step(x, p["r1"], h1, c1)
+        # local attention on ring buffer
+        pa = p["attn"]
+        h = rms_norm(x, pa["ln"], cfg.norm_eps)
+        b, s, d = h.shape
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        from .common import rope
+        q = rope((h @ pa["attn"]["wq"]).reshape(b, s, hq, dh),
+                 pos[None], cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = rope((h @ pa["attn"]["wk"]).reshape(b, s, hkv, dh),
+                 pos[None], cfg.rope_theta).transpose(0, 2, 1, 3)
+        v = (h @ pa["attn"]["wv"]).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype),
+                                           (0, 0, slot, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype),
+                                           (0, 0, slot, 0))
+        rp = jax.lax.dynamic_update_slice(rp, pos[None].astype(rp.dtype), (slot,))
+        group = hq // hkv
+        kk = jnp.repeat(k_l, group, axis=1) if group > 1 else k_l
+        vv = jnp.repeat(v_l, group, axis=1) if group > 1 else v_l
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) \
+            / (dh ** 0.5)
+        valid = (rp >= 0) & (rp <= pos) & (rp > pos - (cfg.window or win))
+        logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        att = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+        att = att.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+        x = x + att @ pa["attn"]["wo"]
+        x = x + mlp(pa["ffn"], rms_norm(x, pa["ln_ffn"], cfg.norm_eps))
+        return x, (k_l, v_l, rp, st0.h, st0.conv, st1.h, st1.conv)
+
+    n_super = caches.kv[0].shape[0]
+    rg = caches.rglru
+    h_pairs = rg.h[:2 * n_super].reshape(n_super, 2, *rg.h.shape[1:])
+    c_pairs = rg.conv[:2 * n_super].reshape(n_super, 2, *rg.conv.shape[1:])
+    x, (k_new, v_new, rp_new, h0n, c0n, h1n, c1n) = jax.lax.scan(
+        lambda c, i: super_step(c, i), x,
+        (params["supers"], caches.kv[0], caches.kv[1], caches.ring_pos,
+         h_pairs[:, 0], c_pairs[:, 0], h_pairs[:, 1], c_pairs[:, 1]))
+    h_new = jnp.stack([h0n, h1n], axis=1).reshape(2 * n_super,
+                                                  *rg.h.shape[1:])
+    c_new = jnp.stack([c0n, c1n], axis=1).reshape(2 * n_super,
+                                                  *rg.conv.shape[1:])
+    # tail recurrent layers
+    if params.get("tail"):
+        rem = rg.h.shape[0] - 2 * n_super
+
+        def tail_step(x, inputs):
+            p, h_t, c_t = inputs
+            x, st = rec_step(x, p, h_t, c_t)
+            return x, (st.h, st.conv)
+        x, (ht_new, ct_new) = jax.lax.scan(
+            lambda c, i: tail_step(c, i), x,
+            (params["tail"], rg.h[2 * n_super:], rg.conv[2 * n_super:]))
+        h_new = jnp.concatenate([h_new, ht_new], axis=0)
+        c_new = jnp.concatenate([c_new, ct_new], axis=0)
+    caches = caches._replace(kv=(k_new, v_new), ring_pos=rp_new,
+                             rglru=RglruState(h_new, c_new))
+    return x, caches

@@ -1,0 +1,93 @@
+"""AdamW optimizer (pure JAX, pytree states) with optional gradient
+compression hook (int8 + error feedback) and global-norm clipping."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: PyTree
+    v: PyTree
+    ef: Optional[PyTree] = None     # error-feedback residual (compression)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    compress: Optional["GradTransform"] = None
+    moment_dtype: Any = jnp.float32
+
+    def init(self, params: PyTree, *, abstract: bool = False) -> AdamWState:
+        def zero(leaf):
+            if abstract:
+                return jax.ShapeDtypeStruct(leaf.shape, self.moment_dtype)
+            return jnp.zeros(leaf.shape, self.moment_dtype)
+        step = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                else jnp.zeros((), jnp.int32))
+        ef = None
+        if self.compress is not None:
+            ef = jax.tree.map(zero, params)
+        return AdamWState(step=step, m=jax.tree.map(zero, params),
+                          v=jax.tree.map(zero, params), ef=ef)
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree
+               ) -> tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        ef = state.ef
+        if self.compress is not None:
+            grads, ef = self.compress.apply(grads, ef)
+        if self.clip_norm is not None:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g32
+            v = self.b2 * v + (1 - self.b2) * g32 * g32
+            mh = m / b1c
+            vh = v / b2c
+            u = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:                      # decay matrices only
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamWState(step=step, m=m_new, v=v_new, ef=ef)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+class GradTransform:
+    """Interface for gradient compression (see grad_compress.py)."""
+
+    def apply(self, grads: PyTree, ef: PyTree
+              ) -> tuple[PyTree, PyTree]:  # pragma: no cover - interface
+        raise NotImplementedError

@@ -1,0 +1,90 @@
+"""Elastic scaling: re-mesh a running job when the device pool changes.
+
+At fleet scale, node failures shrink the healthy pool and repaired nodes
+rejoin. The elastic protocol here:
+
+1. ``plan_mesh(n_devices)`` — choose the largest supportable (data, model)
+   grid (model-parallel degree is preserved when possible so parameter
+   shards stay compatible; data parallelism absorbs the change).
+2. ``reshard(tree, old→new shardings)`` — device_put the live state onto
+   the new mesh (GSPMD moves only the bytes that actually change owner).
+3. The caller re-lowers its step function for the new mesh and continues
+   from the in-memory state (or restores the latest checkpoint if the
+   failure lost device memory).
+
+The gating invariant: global batch is unchanged, so a re-meshed run is
+statistically identical to an uninterrupted one (only step time changes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int = 16,
+              min_model_parallel: int = 1) -> MeshPlan:
+    """Largest (data, model) grid fitting the healthy pool.
+
+    Keeps the requested model-parallel degree if any multiple of it fits;
+    otherwise degrades model parallelism by powers of two (parameters are
+    re-sharded — costly but correct).
+    """
+    mp = model_parallel
+    while mp >= max(min_model_parallel, 1):
+        data = n_devices // mp
+        if data >= 1:
+            return MeshPlan(shape=(data, mp), axes=("data", "model"))
+        mp //= 2
+    raise ValueError(f"cannot build a mesh from {n_devices} devices")
+
+
+def build_mesh(plan: MeshPlan,
+               devices: Optional[Sequence] = None) -> Mesh:
+    devs = list(devices if devices is not None else jax.devices())
+    need = plan.n_devices
+    if len(devs) < need:
+        raise ValueError(f"plan needs {need} devices, have {len(devs)}")
+    grid = np.asarray(devs[:need]).reshape(plan.shape)
+    return Mesh(grid, plan.axes)
+
+
+def reshard(tree: PyTree, new_shardings: PyTree) -> PyTree:
+    """Move live state onto a new mesh (elastic shrink/grow)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, new_shardings)
+
+
+@dataclasses.dataclass
+class ElasticRunner:
+    """Bookkeeping for failure-driven re-meshing.
+
+    ``on_failure(surviving_devices)`` returns the new mesh; callers then
+    reshard state + re-lower. Tracks topology history for postmortems.
+    """
+
+    model_parallel: int = 16
+    history: list = dataclasses.field(default_factory=list)
+
+    def on_pool_change(self, n_devices: int) -> MeshPlan:
+        plan = plan_mesh(n_devices, model_parallel=self.model_parallel)
+        self.history.append({"n_devices": n_devices,
+                             "shape": plan.shape})
+        return plan

@@ -1,0 +1,90 @@
+"""Step-time health monitoring with stratified sampled profiling.
+
+This is the paper's technique feeding back into the training runtime
+(DESIGN.md §2.3): per-step wall times form a population; cheap features
+(step index phase, data-shape bucket, recent loss) are the phase-1
+auxiliary variable; occasionally the runtime takes a *stratified* sample of
+steps to profile in depth (host callbacks, timing breakdowns) instead of
+profiling uniformly — fewer profiled steps for the same confidence on the
+mean step time, and collapsed-strata CIs when only one profile per stratum
+is affordable.
+
+``StragglerDetector`` additionally flags steps slower than
+median + k·IQR — the restart/straggler-mitigation trigger at fleet scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from ..core.sampling import (collapsed_strata_estimate, srs_estimate,
+                             stratified_estimate_from_samples)
+
+
+@dataclasses.dataclass
+class StepTimer:
+    """Rolling step-duration tracker."""
+
+    window: int = 512
+    _times: deque = dataclasses.field(default_factory=lambda: deque())
+    _last: Optional[float] = None
+
+    def tick(self) -> Optional[float]:
+        now = time.perf_counter()
+        dt = None
+        if self._last is not None:
+            dt = now - self._last
+            self._times.append(dt)
+            if len(self._times) > self.window:
+                self._times.popleft()
+        self._last = now
+        return dt
+
+    def record(self, dt: float) -> None:
+        self._times.append(dt)
+        if len(self._times) > self.window:
+            self._times.popleft()
+
+    @property
+    def times(self) -> np.ndarray:
+        return np.asarray(self._times)
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """Flag outlier steps (median + k*IQR rule over a rolling window)."""
+
+    k: float = 3.0
+    min_samples: int = 32
+
+    def is_straggler(self, times: np.ndarray, dt: float) -> bool:
+        if times.size < self.min_samples:
+            return False
+        q1, med, q3 = np.percentile(times, [25, 50, 75])
+        return dt > med + self.k * max(q3 - q1, 1e-9)
+
+
+def stratified_steptime_estimate(times, strata_labels, *, num_strata: int,
+                                 confidence: float = 0.95):
+    """Mean step time + CI from a stratified sample of profiled steps."""
+    return stratified_estimate_from_samples(
+        np.asarray(times), np.asarray(strata_labels),
+        num_strata=num_strata, confidence=confidence)
+
+
+def one_per_stratum_steptime_ci(times_per_stratum, weights, *,
+                                confidence: float = 0.95):
+    """Collapsed-strata CI when only one profiled step per stratum exists
+    (the cheapest profiling budget — paper Section V.A.3)."""
+    return collapsed_strata_estimate(np.asarray(times_per_stratum),
+                                     np.asarray(weights),
+                                     confidence=confidence)
+
+
+def srs_steptime_estimate(times, *, confidence: float = 0.95):
+    return srs_estimate(np.asarray(times), confidence=confidence)

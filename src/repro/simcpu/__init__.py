@@ -1,0 +1,17 @@
+"""Synthetic CPU-simulation substrate (stands in for gem5 + SPECint 2017)."""
+
+from .bbv import NUM_BLOCKS, get_bbvs, synthesize_bbvs
+from .perfmodel import cpi_only, evaluate_regions, stats_matrix
+from .simulator import CycleAccurateSimulator, Ledger, make_simulator
+from .uarch import BASELINE, CONFIGS, UarchConfig
+from .workload import (APP_NAMES, APP_SPECS, REGION_LEN_INSTR, AppPopulation,
+                       AppSpec, generate_population, get_population)
+
+__all__ = [
+    "UarchConfig", "CONFIGS", "BASELINE",
+    "AppSpec", "AppPopulation", "APP_SPECS", "APP_NAMES",
+    "generate_population", "get_population", "REGION_LEN_INSTR",
+    "evaluate_regions", "cpi_only", "stats_matrix",
+    "synthesize_bbvs", "get_bbvs", "NUM_BLOCKS",
+    "CycleAccurateSimulator", "Ledger", "make_simulator",
+]

@@ -1,0 +1,102 @@
+"""Two-phase stratified sampled evaluation for LMs (the paper's technique
+as a first-class training-framework feature — DESIGN.md §2.3).
+
+Estimating eval loss over a large heterogeneous corpus is the LM analogue
+of estimating CPI over an application's regions:
+
+  phase 1   forward a large random sample of eval batches once on the
+            *current* checkpoint, recording a cheap per-batch feature
+            vector (loss, token entropy, mean seq length, OOV rate,
+            router-load stats for MoE) — the "RFV";
+  stratify  k-means on the standardized features;
+  phase 2   day-to-day evals forward only one batch per stratum (centroid
+            selection); periodic CI checks sample a few batches per
+            stratum and apply the two-phase formulas (eq. 5/6).
+
+Same estimators, same code path as the simcpu reproduction — the point of
+the framework is that ``repro.core.sampling`` is substrate-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core.clustering import Standardizer, kmeans
+from ..core.sampling import (Estimate, select_centroid, summarize_strata,
+                             two_phase_estimate, weighted_point_estimate)
+
+
+@dataclasses.dataclass
+class SampledEval:
+    """``eval_batch(idx) -> (loss, feature_vector)`` over a corpus of
+    ``n_batches`` batches; the driver owns phase-1 sampling, stratification
+    and the cheap phase-2 estimators."""
+
+    n_batches: int
+    eval_batch: Callable[[int], tuple[float, np.ndarray]]
+    num_strata: int = 16
+    seed: int = 0
+
+    # phase-1 artifacts
+    _idx1: Optional[np.ndarray] = None
+    _losses1: Optional[np.ndarray] = None
+    _labels: Optional[np.ndarray] = None
+    _weights: Optional[np.ndarray] = None
+    _selected: Optional[list] = None
+
+    def characterize(self, n_phase1: int) -> Estimate:
+        rng = np.random.default_rng(self.seed)
+        self._idx1 = rng.choice(self.n_batches,
+                                size=min(n_phase1, self.n_batches),
+                                replace=False)
+        losses, feats = [], []
+        for i in self._idx1:
+            loss, f = self.eval_batch(int(i))
+            losses.append(loss)
+            feats.append(np.asarray(f, np.float64))
+        self._losses1 = np.asarray(losses)
+        feats = np.stack(feats)
+
+        _, z = Standardizer.fit_transform(feats)
+        z = np.asarray(z)
+        km = kmeans(z, min(self.num_strata, len(self._idx1)), seed=self.seed)
+        self._labels = km.labels
+        counts = np.bincount(km.labels, minlength=km.centroids.shape[0])
+        self._weights = counts / counts.sum()
+        self._selected = select_centroid(km.labels, z, km.centroids)
+        from ..core.sampling import srs_estimate
+        return srs_estimate(self._losses1)
+
+    def quick_estimate(self) -> float:
+        """Day-to-day eval: one forward per stratum (centroid batches)."""
+        if self._selected is None:
+            raise RuntimeError("characterize() first")
+        y = np.array([self.eval_batch(int(self._idx1[s[0]]))[0]
+                      for s in self._selected if s.size])
+        sel = [np.array([i]) for i in range(len(y))]
+        w = self._weights[[h for h, s in enumerate(self._selected)
+                           if s.size]]
+        return weighted_point_estimate(sel, y, w / w.sum())
+
+    def ci_check(self, per_stratum: int = 4,
+                 confidence: float = 0.95) -> Estimate:
+        """Periodic multi-batch-per-stratum CI (paper step 4b)."""
+        rng = np.random.default_rng(self.seed + 1)
+        ys, labs = [], []
+        for h in range(int(self._weights.shape[0])):
+            pool = self._idx1[self._labels == h]
+            if pool.size == 0:
+                continue
+            take = rng.choice(pool, size=min(per_stratum, pool.size),
+                              replace=False)
+            for i in take:
+                ys.append(self.eval_batch(int(i))[0])
+                labs.append(h)
+        summaries = summarize_strata(np.asarray(ys), np.asarray(labs),
+                                     weights=self._weights,
+                                     num_strata=self._weights.shape[0])
+        return two_phase_estimate(summaries, phase1_n=self._idx1.size,
+                                  confidence=confidence)

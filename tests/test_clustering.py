@@ -1,0 +1,90 @@
+"""k-means / projection / standardizer tests."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.clustering import (Standardizer, best_of, kmeans,
+                                   kmeans_multi_seed, random_project)
+
+
+def _blobs(n_per, k, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.concatenate([rng.normal(4.0 * i, 0.3, (n_per, d))
+                           for i in range(k)])
+
+
+def test_kmeans_recovers_separated_blobs():
+    x = _blobs(100, 4, 6)
+    km = kmeans(x, 4, seed=0, restarts=4)
+    # each true blob maps to exactly one cluster
+    labels = km.labels.reshape(4, 100)
+    for i in range(4):
+        assert len(np.unique(labels[i])) == 1
+    assert km.inertia < 4 * 100 * 6 * 0.5
+
+
+def test_kmeans_centroid_is_mean_of_members():
+    x = _blobs(50, 3, 4)
+    km = kmeans(x, 3, seed=1)
+    for h in range(3):
+        m = km.labels == h
+        np.testing.assert_allclose(km.centroids[h], x[m].mean(0), atol=1e-3)
+
+
+def test_kmeans_inertia_decreases_with_k():
+    x = _blobs(80, 5, 5, seed=2)
+    inertias = [kmeans(x, k, seed=0).inertia for k in (2, 5, 10)]
+    assert inertias[0] > inertias[1] > inertias[2]
+
+
+def test_kmeans_pallas_backend_matches_jnp():
+    x = _blobs(60, 3, 5, seed=3)
+    a = kmeans(x, 3, seed=0, backend="jnp")
+    b = kmeans(x, 3, seed=0, backend="pallas")
+    assert (a.labels == b.labels).mean() > 0.99
+    np.testing.assert_allclose(a.inertia, b.inertia, rtol=1e-4)
+
+
+def test_multi_seed_best_of():
+    x = _blobs(40, 4, 4, seed=4)
+    results = kmeans_multi_seed(x, 4, seeds=range(5))
+    best = best_of(results)
+    assert best.inertia == min(r.inertia for r in results)
+
+
+def test_standardizer_zero_mean_unit_var():
+    rng = np.random.default_rng(5)
+    x = rng.normal(3, 7, (500, 4))
+    x[:, 2] = 1.234                   # constant column
+    st, z = Standardizer.fit_transform(x)
+    z = np.asarray(z)
+    np.testing.assert_allclose(z.mean(0), 0, atol=1e-6)
+    np.testing.assert_allclose(z[:, [0, 1, 3]].std(0), 1, atol=1e-3)
+    assert np.all(z[:, 2] == 0)      # constant -> 0, not NaN
+
+
+def test_random_projection_separates_clusters():
+    """JL property on structured data: projected blobs remain separable
+    (within-blob distances << across-blob distances)."""
+    rng = np.random.default_rng(6)
+    base = rng.normal(size=(4, 500)).astype(np.float32) * 5
+    x = np.concatenate([base[i] + rng.normal(0, 0.2, (20, 500))
+                        for i in range(4)]).astype(np.float32)
+    z = np.asarray(random_project(x, 32, key=jax.random.PRNGKey(0),
+                                  normalize_rows=False))
+    z = z.reshape(4, 20, 32)
+    within = max(np.linalg.norm(z[i] - z[i].mean(0), axis=-1).max()
+                 for i in range(4))
+    centers = z.mean(1)
+    across = min(np.linalg.norm(centers[i] - centers[j])
+                 for i in range(4) for j in range(i + 1, 4))
+    assert across > 3 * within
+
+
+def test_kmeans_invalid_k():
+    x = _blobs(10, 2, 3)
+    with pytest.raises(ValueError):
+        kmeans(x, 0)
+    with pytest.raises(ValueError):
+        kmeans(x, 100)

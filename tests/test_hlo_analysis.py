@@ -1,0 +1,67 @@
+"""Collective-byte analyzer tests (crafted HLO + a real lowered module)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import collective_bytes, summarize_collectives
+
+FAKE_HLO = """
+HloModule test
+
+%cond (arg: (s32[], f32[4])) -> pred[] {
+  %gte = s32[] get-tuple-element(%arg), index=0
+  %limit = s32[] constant(10)
+  ROOT %lt = pred[] compare(%gte, %limit), direction=LT
+}
+
+%body (arg: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %x = f32[4]{0} get-tuple-element(%arg), index=1
+  %ar = f32[4]{0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%sum
+  ROOT %t = (s32[], f32[4]) tuple(%gte2, %ar)
+}
+
+ENTRY %main (p: f32[128,256]) -> f32[128,256] {
+  %ag = f32[128,256]{1,0} all-gather(%p), replica_groups=[16,16]<=[256], dimensions={0}
+  %w = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[128,256]{1,0} add(%ag, %ag)
+}
+"""
+
+
+def test_parser_counts_and_loop_weighting():
+    stats = collective_bytes(FAKE_HLO)
+    assert "all-gather" in stats
+    assert stats["all-gather"].count == 1
+    assert stats["all-gather"].result_bytes == 128 * 256 * 4
+    # the all-reduce sits in a while body with trip count 10
+    assert stats["all-reduce"].count == 10
+    assert stats["all-reduce"].result_bytes == 10 * 4 * 4
+    # AR wire = 2x result
+    assert stats["all-reduce"].wire_bytes == 2 * 10 * 4 * 4
+
+
+def test_summarize_totals():
+    s = summarize_collectives(FAKE_HLO)
+    assert s["total_count"] == 11
+    assert s["total_wire_bytes"] > s["total_result_bytes"]
+
+
+@pytest.mark.skipif(len(jax.devices()) < 1, reason="needs a device")
+def test_real_module_collectives_detected():
+    """A psum under shard_map must appear as an all-reduce."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    devs = np.array(jax.devices())
+    mesh = Mesh(devs.reshape(len(devs)), ("d",))
+
+    def f(x):
+        return jax.lax.psum(x, "d")
+
+    sf = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
+    lowered = jax.jit(sf).lower(
+        jax.ShapeDtypeStruct((len(jax.devices()) * 4,), jnp.float32))
+    txt = lowered.compile().as_text()
+    stats = collective_bytes(txt)
+    if len(jax.devices()) > 1:
+        assert any("all-reduce" in k for k in stats)

@@ -1,0 +1,100 @@
+"""Per-kernel allclose sweeps vs pure-jnp oracles (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+from repro.kernels.segment_stats.ops import segment_stats, stratum_moments
+from repro.kernels.segment_stats.ref import segment_stats_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n,d,k", [
+    (100, 15, 20), (1000, 38, 20), (513, 7, 3), (2048, 128, 128),
+    (64, 1, 2), (4096, 15, 500),
+])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_kmeans_assign_matches_ref(n, d, k, dtype):
+    x = RNG.normal(size=(n, d)).astype(dtype)
+    c = RNG.normal(size=(k, d)).astype(dtype)
+    l1, d1 = kmeans_assign(x, c)
+    l2, d2 = kmeans_assign_ref(jnp.asarray(x), jnp.asarray(c))
+    assert (np.asarray(l1) == np.asarray(l2)).mean() > 0.999
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("n,d,k", [
+    (100, 1, 4), (3000, 38, 20), (1024, 8, 7), (4096, 4, 64),
+])
+def test_segment_stats_matches_ref(n, d, k):
+    x = RNG.normal(size=(n, d)).astype(np.float32)
+    lab = RNG.integers(0, k, n).astype(np.int32)
+    s1, q1, c1 = segment_stats(x, lab, k)
+    s2, q2, c2 = segment_stats_ref(jnp.asarray(x), jnp.asarray(lab), k)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2))
+
+
+def test_stratum_moments_match_numpy():
+    x = RNG.normal(size=2000).astype(np.float32)
+    lab = RNG.integers(0, 10, 2000).astype(np.int32)
+    m, v, c = stratum_moments(x, lab, 10)
+    for h in range(10):
+        seg = x[lab == h]
+        assert float(m[h, 0]) == pytest.approx(seg.mean(), rel=1e-4)
+        assert float(v[h, 0]) == pytest.approx(seg.var(ddof=1), rel=1e-3)
+        assert float(c[h]) == seg.size
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [
+    (1, 4, 2, 256, 256, 64),
+    (2, 8, 4, 300, 300, 32),
+    (1, 4, 1, 1, 512, 64),      # decode
+    (1, 2, 2, 1, 700, 128),     # decode, unaligned cache
+    (1, 4, 4, 512, 512, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, hq, hkv, sq, skv, d, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, skv, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, skv, d)), dtype)
+    o1 = flash_attention(q, k, v)
+    kk = jnp.repeat(k, hq // hkv, axis=1)
+    vv = jnp.repeat(v, hq // hkv, axis=1)
+    o2 = attention_ref(q, kk, vv, causal=True)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_rejects_non_causal():
+    q = jnp.zeros((1, 2, 8, 16))
+    with pytest.raises(NotImplementedError):
+        flash_attention(q, q, q, causal=False)
+
+
+def test_chunked_attention_matches_ref():
+    """The pure-jnp streaming attention used by the big-model forward."""
+    from repro.models.attention import _attend_chunked
+    q = jnp.asarray(RNG.normal(size=(2, 4, 300, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 4, 300, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 4, 300, 32)), jnp.float32)
+    o1 = _attend_chunked(q, k, v, window=None, kv_chunk=64)
+    o2 = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+    # windowed (local attention)
+    o3 = _attend_chunked(q, k, v, window=50, kv_chunk=64)
+    o4 = attention_ref(q, k, v, causal=True, window=50)
+    np.testing.assert_allclose(np.asarray(o3), np.asarray(o4),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests + recurrence-equivalence invariants.
+
+Each assigned architecture instantiates its REDUCED config and runs one
+forward/train step on CPU asserting output shapes + no NaNs (full configs
+are exercised via the dry-run only).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models.registry import (decode_fn, forward_fn, init_params,
+                                   loss_fn, make_decode_state)
+
+RNG = np.random.default_rng(0)
+
+
+def _batch(cfg, b=2, s=64):
+    out = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (b, s))),
+           "labels": jnp.asarray(RNG.integers(0, cfg.vocab, (b, s)))}
+    if cfg.family == "encdec":
+        out["src_embeds"] = jnp.asarray(
+            RNG.normal(size=(b, 32, cfg.d_model)), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_loss(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = forward_fn(cfg)(params, batch)
+    assert logits.shape == (2, 64, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss = loss_fn(cfg)(params, batch)
+    assert np.isfinite(float(loss))
+    assert 0.0 < float(loss) < 20.0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step_descends(arch):
+    from repro.optim import AdamW, apply_updates
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(lr=5e-3)
+    state = opt.init(params)
+    lfn = loss_fn(cfg)
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, s):
+        l, g = jax.value_and_grad(lfn)(p, batch)
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s, l
+
+    losses = []
+    for _ in range(4):
+        params, state, loss = step(params, state)
+        losses.append(float(loss))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    caches = make_decode_state(cfg, 2, 128, s_src=32)
+    if cfg.family == "encdec":
+        from repro.models.encdec import encode, precompute_cross_kv
+        src = jnp.asarray(RNG.normal(size=(2, 32, cfg.d_model)), jnp.float32)
+        memory = encode(params, src, cfg)
+        ck, cv = precompute_cross_kv(params, memory, cfg)
+        caches = caches._replace(cross_k=ck, cross_v=cv)
+    tok = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 1)), jnp.int32)
+    logits, caches2 = decode_fn(cfg)(params, tok, caches, jnp.int32(3))
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_decode_matches_forward_dense():
+    """Teacher-forced decode equals the parallel forward (same tokens)."""
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    s = 24
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab, (1, s)), jnp.int32)
+    full = forward_fn(cfg)(params, {"tokens": tokens})
+    caches = make_decode_state(cfg, 1, 64)
+    dfn = decode_fn(cfg)
+    outs = []
+    for t in range(s):
+        logits, caches = dfn(params, tokens[:, t:t + 1], caches,
+                             jnp.int32(t))
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_rwkv_chunked_equals_step():
+    from repro.models.common import KeyGen
+    from repro.models.rwkv6 import (RwkvState, init_rwkv_time_mix,
+                                    rwkv_time_mix_chunked,
+                                    rwkv_time_mix_step)
+    cfg = get_config("rwkv6-7b", smoke=True)
+    kg = KeyGen(jax.random.PRNGKey(1), False)
+    p = init_rwkv_time_mix(cfg, kg)
+    b, s, d = 2, 96, cfg.d_model
+    x = jnp.asarray(RNG.normal(size=(b, s, d)), jnp.float32) * 0.5
+    h = d // cfg.rwkv_head_dim
+    st0 = RwkvState(jnp.zeros((b, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                              jnp.float32), jnp.zeros((b, d), jnp.float32))
+    out_c, st_c = rwkv_time_mix_chunked(p, x, cfg, st0, chunk=32)
+    st = st0
+    outs = []
+    for t in range(s):
+        o, st = rwkv_time_mix_step(p, x[:, t:t + 1], cfg, st)
+        outs.append(o)
+    out_s = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_c.s), np.asarray(st.s),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_rglru_scan_equals_step():
+    from repro.models.common import KeyGen
+    from repro.models.rglru import (RglruState, init_rglru, make_rglru_state,
+                                    rglru_block, rglru_step)
+    cfg = get_config("recurrentgemma-2b", smoke=True)
+    kg = KeyGen(jax.random.PRNGKey(2), False)
+    p = init_rglru(cfg, kg)
+    b, s, d = 2, 48, cfg.d_model
+    w = cfg.rnn_width
+    x = jnp.asarray(RNG.normal(size=(b, s, d)), jnp.float32) * 0.3
+    st0 = RglruState(jnp.zeros((b, w), jnp.float32),
+                     jnp.zeros((b, 3, w), jnp.float32))
+    out_p, st_p = rglru_block(p, x, cfg, st0)
+    st = st0
+    outs = []
+    for t in range(s):
+        o, st = rglru_step(p, x[:, t:t + 1], cfg, st)
+        outs.append(o)
+    out_s = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_s),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_p.h), np.asarray(st.h),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_moe_routes_to_topk_and_drops_overflow():
+    from repro.models.common import KeyGen
+    from repro.models.moe import init_moe, moe
+    cfg = get_config("olmoe-1b-7b", smoke=True)
+    kg = KeyGen(jax.random.PRNGKey(3), False)
+    p = init_moe(cfg, kg)
+    x = jnp.asarray(RNG.normal(size=(2, 32, cfg.d_model)), jnp.float32)
+    out = moe(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    # zero input -> zero output (router gates scale expert outputs of 0)
+    out0 = moe(p, jnp.zeros_like(x), cfg)
+    np.testing.assert_allclose(np.asarray(out0), 0.0, atol=1e-5)
+
+
+def test_long_context_shape_skips_match_design():
+    from repro.configs import cells_for
+    runs_500k = {a for a in ALL_ARCHS
+                 if any(c.name == "long_500k"
+                        for c in cells_for(get_config(a)))}
+    assert runs_500k == {"rwkv6-7b", "recurrentgemma-2b"}

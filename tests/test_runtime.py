@@ -1,0 +1,99 @@
+"""Checkpoint / elastic / health runtime tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.runtime.checkpoint import (latest_step, restore_checkpoint,
+                                      save_checkpoint)
+from repro.runtime.elastic import build_mesh, plan_mesh, reshard
+from repro.runtime.health import (StepTimer, StragglerDetector,
+                                  one_per_stratum_steptime_ci,
+                                  stratified_steptime_estimate)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.integers(0, 9, (3,)), jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 7, tree, extra={"step": 7})
+    restored, extra = restore_checkpoint(tmp_path, tree)
+    assert extra["step"] == 7
+    np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                  np.asarray(restored["a"]))
+    np.testing.assert_array_equal(np.asarray(tree["nested"]["b"]),
+                                  np.asarray(restored["nested"]["b"]))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    tree = _tree()
+    for step in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, step, tree, keep=3)
+    assert latest_step(tmp_path) == 5
+    kept = sorted(int(p.name.split("_")[1])
+                  for p in tmp_path.glob("step_*"))
+    assert kept == [3, 4, 5]
+
+
+def test_checkpoint_shape_mismatch_detected(tmp_path):
+    save_checkpoint(tmp_path, 0, _tree())
+    bad = {"a": jnp.zeros((2, 2)), "nested": {"b": jnp.zeros(3, jnp.int32)}}
+    with pytest.raises(ValueError):
+        restore_checkpoint(tmp_path, bad)
+
+
+def test_elastic_mesh_plans():
+    p = plan_mesh(256, model_parallel=16)
+    assert p.shape == (16, 16)
+    p = plan_mesh(240, model_parallel=16)    # lost a node's chips
+    assert p.shape == (15, 16)
+    p = plan_mesh(8, model_parallel=16)      # degrade TP
+    assert p.shape[0] * p.shape[1] <= 8
+    with pytest.raises(ValueError):
+        plan_mesh(0)
+
+
+def test_elastic_reshard_on_host():
+    plan = plan_mesh(len(jax.devices()), model_parallel=1)
+    mesh = build_mesh(plan)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = _tree()
+    sh = {"a": NamedSharding(mesh, P()), "nested": {
+        "b": NamedSharding(mesh, P())}}
+    out = reshard(tree, sh)
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_straggler_detector():
+    det = StragglerDetector(k=3.0, min_samples=10)
+    times = np.full(100, 0.1) + np.random.default_rng(0).normal(0, 0.002, 100)
+    assert not det.is_straggler(times, 0.105)
+    assert det.is_straggler(times, 0.5)
+
+
+def test_step_timer_window():
+    t = StepTimer(window=5)
+    for i in range(10):
+        t.record(float(i))
+    assert t.times.size == 5
+    assert t.times[-1] == 9.0
+
+
+def test_stratified_steptime_cis():
+    rng = np.random.default_rng(1)
+    # two regimes: fast data shapes and slow ones
+    labels = rng.integers(0, 2, 200)
+    times = np.where(labels == 0, 0.1, 0.3) + rng.normal(0, 0.01, 200)
+    est = stratified_steptime_estimate(times, labels, num_strata=2)
+    assert abs(est.mean - times.mean()) < 0.02
+    est1 = one_per_stratum_steptime_ci([0.1, 0.12, 0.3, 0.29],
+                                       [0.25, 0.25, 0.25, 0.25])
+    assert np.isfinite(est1.margin)

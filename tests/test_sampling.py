@@ -1,0 +1,145 @@
+"""Estimator unit + property tests (paper Appendix A formulas)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampling import (collapsed_strata_estimate,
+                                 dalenius_gurney_strata, draw_srs,
+                                 neyman_allocation, proportional_allocation,
+                                 srs_estimate, srs_required_n,
+                                 stratified_estimate_from_samples,
+                                 stratum_products, summarize_strata,
+                                 two_phase_estimate, critical_value)
+
+
+def test_srs_matches_numpy():
+    rng = np.random.default_rng(0)
+    y = rng.normal(5.0, 2.0, 1000)
+    est = srs_estimate(y)
+    assert est.mean == pytest.approx(y.mean())
+    assert est.variance == pytest.approx(y.var(ddof=1) / 1000)
+    lo, hi = est.interval
+    assert lo < y.mean() < hi
+
+
+def test_srs_small_sample_uses_t():
+    rng = np.random.default_rng(1)
+    y = rng.normal(0, 1, 10)
+    est = srs_estimate(y)
+    assert est.df == 9
+    # t margin wider than z margin
+    z = critical_value(0.95, None)
+    t = critical_value(0.95, 9)
+    assert t > z
+
+
+@given(st.integers(2, 6), st.integers(20, 200))
+@settings(max_examples=20, deadline=None)
+def test_stratified_census_recovers_population_mean(L, per):
+    """Property: sampling EVERY unit stratified == population mean."""
+    rng = np.random.default_rng(L * 1000 + per)
+    y = rng.normal(0, 1, L * per) + np.repeat(np.arange(L), per) * 3.0
+    labels = np.repeat(np.arange(L), per)
+    est = stratified_estimate_from_samples(y, labels, num_strata=L)
+    assert est.mean == pytest.approx(y.mean(), abs=1e-9)
+
+
+def test_stratification_reduces_variance():
+    """Stratifying on a variable correlated with y tightens the CI."""
+    rng = np.random.default_rng(2)
+    n = 4000
+    strata = rng.integers(0, 4, n)
+    y = strata * 5.0 + rng.normal(0, 0.5, n)
+    # proportional stratified sample of 100 vs SRS of 100
+    sel = np.concatenate([np.flatnonzero(strata == h)[:25] for h in range(4)])
+    w = np.bincount(strata) / n
+    est_strat = stratified_estimate_from_samples(
+        y[sel], strata[sel], weights=w, num_strata=4)
+    est_srs = srs_estimate(y[rng.choice(n, 100, replace=False)])
+    assert est_strat.margin < est_srs.margin
+
+
+def test_srs_coverage_property():
+    """~95% of 95% CIs cover the true mean (frequentist calibration)."""
+    rng = np.random.default_rng(3)
+    pop = rng.gamma(2.0, 2.0, 100_000)
+    true = pop.mean()
+    cover = 0
+    trials = 400
+    for _ in range(trials):
+        y = pop[rng.choice(pop.size, 100, replace=False)]
+        if srs_estimate(y).covers(true):
+            cover += 1
+    assert 0.90 <= cover / trials <= 0.99
+
+
+def test_collapsed_strata_df_and_mean():
+    y = np.arange(20, dtype=float)
+    w = np.full(20, 1 / 20)
+    est = collapsed_strata_estimate(y, w)
+    assert est.mean == pytest.approx(y.mean())
+    assert est.df == 10          # L/2 for pairwise collapsing
+    assert est.variance > 0
+
+
+def test_collapsed_strata_odd_L():
+    y = np.arange(7, dtype=float)
+    w = np.full(7, 1 / 7)
+    est = collapsed_strata_estimate(y, w)
+    assert est.mean == pytest.approx(y.mean())
+    assert np.isfinite(est.margin)
+
+
+def test_two_phase_formulas_agree_when_phase1_large():
+    """eq.(5)/(6) both reduce to plain stratified for huge phase-1 n."""
+    rng = np.random.default_rng(4)
+    y = rng.normal(0, 1, 200)
+    labels = rng.integers(0, 5, 200)
+    summ = summarize_strata(y, labels, num_strata=5)
+    big = two_phase_estimate(summ, phase1_n=10**9)
+    small = two_phase_estimate(summ, phase1_n=50)
+    assert big.variance < small.variance
+    assert big.mean == pytest.approx(small.mean)
+
+
+@given(st.integers(2, 10))
+@settings(max_examples=15, deadline=None)
+def test_dalenius_gurney_balances_products(L):
+    rng = np.random.default_rng(L)
+    x = rng.lognormal(0, 1, 5000)
+    labels = dalenius_gurney_strata(x, L)
+    assert labels.min() >= 0 and labels.max() == L - 1
+    prods = stratum_products(x, labels, L)
+    # products should be far more balanced than equal-count strata
+    eq = np.quantile(x, np.linspace(0, 1, L + 1))
+    eq_labels = np.clip(np.searchsorted(eq, x, side="right") - 1, 0, L - 1)
+    eq_prods = stratum_products(x, eq_labels, L)
+    assert prods.std() <= eq_prods.std() * 1.5 + 1e-9
+
+
+def test_allocations_sum_and_minima():
+    w = np.array([0.5, 0.3, 0.2])
+    s = np.array([1.0, 4.0, 0.1])
+    n_prop = proportional_allocation(w, 100)
+    n_ney = neyman_allocation(w, s, 100)
+    assert n_prop.sum() >= 100
+    assert (n_prop >= 2).all() and (n_ney >= 2).all()
+    # Neyman puts more where W*S is big
+    assert n_ney[1] > n_prop[1]
+
+
+def test_required_n_scales_with_precision():
+    rng = np.random.default_rng(5)
+    pilot = rng.normal(10, 3, 50)
+    n1 = srs_required_n(pilot, target_margin_pct=5)
+    n2 = srs_required_n(pilot, target_margin_pct=1)
+    assert n2 > n1 * 10
+
+
+def test_draw_srs_without_replacement():
+    rng = np.random.default_rng(6)
+    idx = draw_srs(rng, 100, 50)
+    assert len(set(idx.tolist())) == 50
+    with pytest.raises(ValueError):
+        draw_srs(rng, 10, 20)

@@ -1,0 +1,92 @@
+"""Synthetic CPU-population substrate tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.features import RFV_METRICS
+from repro.simcpu import (APP_NAMES, BASELINE, CONFIGS, Ledger,
+                          REGION_LEN_INSTR, get_bbvs, get_population,
+                          make_simulator)
+
+APP = "520.omnetpp_r"
+
+
+def test_population_deterministic_across_builds():
+    a = get_population(APP)
+    import repro.simcpu.workload as w
+    b = w.generate_population(a.spec, seed=0)
+    np.testing.assert_array_equal(a.features, b.features)
+    np.testing.assert_array_equal(a.phase_ids, b.phase_ids)
+
+
+def test_simulator_returns_all_38_metrics():
+    sim = make_simulator(APP)
+    stats = sim.simulate(np.arange(10), BASELINE)
+    for m in RFV_METRICS:
+        assert m in stats, m
+        assert stats[m].shape == (10,)
+        assert np.isfinite(stats[m]).all()
+    assert len(RFV_METRICS) == 38
+
+
+def test_simulation_is_repeatable():
+    sim = make_simulator(APP)
+    a = sim.simulate_cpi(np.arange(50), CONFIGS[3])
+    b = sim.simulate_cpi(np.arange(50), CONFIGS[3])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_configs_monotonically_faster():
+    for name in APP_NAMES:
+        sim = make_simulator(name)
+        means = [sim.true_mean_cpi(c) for c in CONFIGS]
+        for i in range(6):
+            assert means[i + 1] <= means[i] * 1.001, (name, i, means)
+
+
+def test_geomean_speedup_in_paper_band():
+    ipc0, ipc6 = [], []
+    for name in APP_NAMES:
+        sim = make_simulator(name)
+        ipc0.append(1 / sim.true_mean_cpi(CONFIGS[0]))
+        ipc6.append(1 / sim.true_mean_cpi(CONFIGS[6]))
+    g0 = np.exp(np.mean(np.log(ipc0)))
+    g6 = np.exp(np.mean(np.log(ipc6)))
+    assert 1.5 <= g6 / g0 <= 1.9          # paper: 1.68
+
+
+def test_gcc_has_heavy_outliers():
+    sim = make_simulator("502.gcc_r")
+    cpi = sim.census_stats(CONFIGS[0])["cpi"]
+    assert cpi.max() > 20 * cpi.mean()     # paper: ~28 vs mean 1.36
+    # and the best config largely fixes them (paper: 28 -> 5.66)
+    cpi6 = sim.census_stats(CONFIGS[6])["cpi"]
+    worst = np.argsort(cpi)[-10:]
+    assert cpi6[worst].max() < 0.4 * cpi[worst].max()
+
+
+def test_bbv_shapes_and_region_length():
+    pop = get_population(APP)
+    bbv = get_bbvs(pop)
+    assert bbv.shape[0] == pop.n_regions
+    np.testing.assert_allclose(bbv.sum(axis=1), REGION_LEN_INSTR, rtol=1e-3)
+
+
+def test_aliased_phases_share_bbv_profiles():
+    pop = get_population("502.gcc_r")
+    ids = pop.bbv_profile_ids
+    assert len(np.unique(ids)) < ids.shape[0]
+
+
+def test_ledger_accounting():
+    ledger = Ledger()
+    sim = make_simulator(APP, ledger=ledger)
+    sim.simulate_cpi(np.arange(7), CONFIGS[0])
+    sim.simulate_cpi(np.arange(5), CONFIGS[1])
+    assert ledger.regions_simulated == 12
+    assert ledger.instructions_simulated == 12 * REGION_LEN_INSTR
+
+
+def test_unknown_app_raises():
+    with pytest.raises(KeyError):
+        get_population("999.nonesuch")

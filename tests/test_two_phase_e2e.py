@@ -1,0 +1,79 @@
+"""End-to-end two-phase flow on the simcpu substrate (paper Fig 14)."""
+
+import numpy as np
+import pytest
+
+from repro.core.sampling import TwoPhaseFlow
+from repro.simcpu import CONFIGS, make_simulator
+
+APP = "520.omnetpp_r"
+
+
+@pytest.fixture(scope="module")
+def flow_artifacts():
+    sim = make_simulator(APP)
+    flow = TwoPhaseFlow(population_size=sim.pop.n_regions,
+                        rng=np.random.default_rng(11))
+
+    def measure_baseline(idx):
+        return sim.simulate_rfv(idx, CONFIGS[0])
+
+    idx1, y0, feats, est1 = flow.characterize(measure_baseline, 900)
+    strat = flow.stratify(idx1, y0, feats, num_strata=20, scheme="rfv")
+    return sim, flow, strat, est1
+
+
+def test_phase1_estimate_tight_and_correct(flow_artifacts):
+    sim, flow, strat, est1 = flow_artifacts
+    truth = sim.true_mean_cpi(CONFIGS[0])
+    assert est1.covers(truth)
+    assert est1.margin_pct < 5.0
+
+
+def test_centroid_selection_small_error_across_configs(flow_artifacts):
+    sim, flow, strat, _ = flow_artifacts
+    selected = flow.select(strat, policy="centroid")
+    for cfg_i in (0, 3, 6):
+        est = flow.point_estimate(
+            strat, selected,
+            lambda idx, c=CONFIGS[cfg_i]: sim.simulate_cpi(idx, c))
+        truth = sim.true_mean_cpi(CONFIGS[cfg_i])
+        assert abs(est - truth) / truth < 0.08, (cfg_i, est, truth)
+
+
+def test_collapsed_ci_from_20_sims(flow_artifacts):
+    sim, flow, strat, _ = flow_artifacts
+    selected = flow.select(strat, policy="random", seed=5)
+    est = flow.collapsed_ci(
+        strat, selected, lambda idx: sim.simulate_cpi(idx, CONFIGS[6]))
+    assert est.n == 20
+    assert np.isfinite(est.margin)
+    assert est.df == 10
+
+
+def test_ci_check_multi_unit(flow_artifacts):
+    sim, flow, strat, _ = flow_artifacts
+    sizes = np.full(strat.num_strata, 4)
+    est = flow.ci_check(
+        strat, lambda idx: sim.simulate_cpi(idx, CONFIGS[6]),
+        per_stratum_sizes=sizes)
+    truth = sim.true_mean_cpi(CONFIGS[6])
+    # multi-unit stratified CI should be tight AND cover
+    assert est.margin_pct < 12.0
+    assert est.covers(truth) or abs(est.mean - truth) / truth < 0.05
+
+
+def test_stratified_needs_fewer_sims_than_random(flow_artifacts):
+    """The headline efficiency claim at test scale: matching a random-
+    sampling margin with far fewer stratified simulations."""
+    from repro.core.sampling import srs_estimate
+    sim, flow, strat, _ = flow_artifacts
+    rng = np.random.default_rng(3)
+    # random: n=400 margin
+    idx = rng.choice(sim.pop.n_regions, 400, replace=False)
+    est_rand = srs_estimate(sim.simulate_cpi(idx, CONFIGS[6]))
+    # stratified: 4/stratum = 80 sims
+    est_strat = flow.ci_check(
+        strat, lambda i: sim.simulate_cpi(i, CONFIGS[6]),
+        per_stratum_sizes=np.full(strat.num_strata, 4))
+    assert est_strat.margin <= est_rand.margin * 1.6
