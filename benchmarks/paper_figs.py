@@ -15,10 +15,11 @@ from repro.core.sampling import (Estimate, StratumSummary,
                                  phase2_sizes_for_margin, srs_estimate,
                                  stratified_estimate, summarize_strata,
                                  two_phase_estimate)
-from repro.simcpu import CONFIGS, get_population
+from repro.experiments import SweepSpec, run_sweep
+from repro.simcpu import CONFIGS
 
 from .simcpu_common import (NUM_STRATA, all_apps, build_experiment,
-                            scheme_selection, weighted_estimate)
+                            get_engine, scheme_selection)
 
 
 def _row(name: str, value, derived: str = "") -> None:
@@ -51,21 +52,20 @@ def bench_cpi_distributions() -> dict:
 
 # ---------------------------------------------------------------------- Fig 5
 def bench_config_sweep() -> dict:
-    """Fig 5: per-app IPC across Configs 0-6 with tight phase-1 CIs."""
+    """Fig 5: per-app IPC across Configs 0-6 with tight phase-1 CIs.
+
+    Runs through the experiment engine: per app, ONE vmapped dispatch
+    evaluates the phase-1 sample on all 7 configs at once."""
     t0 = time.time()
-    geo = []
-    for cfg_i in range(7):
-        ipcs = []
-        for name in all_apps():
-            exp = build_experiment(name)
-            cpi1 = exp.cpi(cfg_i, exp.idx1)
-            est = srs_estimate(cpi1)
-            ipcs.append(1.0 / est.mean)
-            if cfg_i in (0, 6):
-                _row(f"fig5_ipc_{name}_cfg{cfg_i}", round(1 / est.mean, 3),
-                     f"margin_pct={est.margin_pct:.2f}")
-        geo.append(float(np.exp(np.mean(np.log(ipcs)))))
-    speedup = geo[6] / geo[0]
+    table = run_sweep(get_engine(), SweepSpec(apps=tuple(all_apps()),
+                                              scheme="srs"))
+    for r in table:
+        if r.config_index in (0, 6):
+            _row(f"fig5_ipc_{r.app}_cfg{r.config_index}",
+                 round(1 / r.estimate, 3), f"margin_pct={r.margin_pct:.2f}")
+    ipc = 1.0 / table.matrix("estimate")            # (7, n_apps)
+    geo = np.exp(np.log(ipc).mean(axis=1))
+    speedup = float(geo[6] / geo[0])
     _row("fig5_geomean_ipc_cfg0", round(geo[0], 3))
     _row("fig5_geomean_ipc_cfg6", round(geo[6], 3))
     _row("fig5_speedup_cfg6_over_cfg0", round(speedup, 3),
@@ -203,23 +203,21 @@ def bench_ci_collapsed() -> dict:
 
 # --------------------------------------------------------------------- Fig 10
 def bench_selection_centroid() -> dict:
-    """Fig 10: measured errors (Configs 0-6) with centroid selection."""
+    """Fig 10: measured errors (Configs 0-6) with centroid selection.
+
+    One ``run_sweep`` per scheme: each app's 20 selected regions are
+    evaluated on all 7 configs in a single batched dispatch."""
     t0 = time.time()
-    out = {}
-    for name in all_apps():
-        exp = build_experiment(name)
-        maxerr = {}
-        for scheme in ("bbv", "rfv", "dg"):
-            sel, weights = scheme_selection(exp, scheme, "centroid")
-            flat = np.concatenate([s for s in sel if s.size])
-            errs = []
-            for cfg_i in range(7):
-                cpi = exp.cpi(cfg_i, flat)
-                est = weighted_estimate(sel, cpi, weights)
-                errs.append(100 * abs(est - exp.truth[cfg_i]) /
-                            exp.truth[cfg_i])
-            maxerr[scheme] = max(errs)
-        out[name] = maxerr
+    engine = get_engine()
+    out = {name: {} for name in all_apps()}
+    for scheme in ("bbv", "rfv", "dg"):
+        table = run_sweep(engine, SweepSpec(apps=tuple(all_apps()),
+                                            scheme=scheme,
+                                            policy="centroid"))
+        for name in all_apps():
+            out[name][scheme] = float(
+                table.filter(app=name).column("err_pct").max())
+    for name, maxerr in out.items():
         _row(f"fig10_maxerr_{name}", round(maxerr["bbv"], 1),
              f"rfv={maxerr['rfv']:.1f};dg={maxerr['dg']:.1f}")
     worst_bbv = max(v["bbv"] for v in out.values())
@@ -235,21 +233,15 @@ def bench_selection_centroid() -> dict:
 def bench_selection_mean() -> dict:
     """Fig 11: mean selection (baseline-CPI nearest stratum mean)."""
     t0 = time.time()
-    out = {}
-    for name in all_apps():
-        exp = build_experiment(name)
-        maxerr = {}
-        for scheme in ("bbv", "rfv", "dg"):
-            sel, weights = scheme_selection(exp, scheme, "mean")
-            flat = np.concatenate([s for s in sel if s.size])
-            errs = []
-            for cfg_i in range(7):
-                cpi = exp.cpi(cfg_i, flat)
-                est = weighted_estimate(sel, cpi, weights)
-                errs.append(100 * abs(est - exp.truth[cfg_i]) /
-                            exp.truth[cfg_i])
-            maxerr[scheme] = max(errs)
-        out[name] = maxerr
+    engine = get_engine()
+    out = {name: {} for name in all_apps()}
+    for scheme in ("bbv", "rfv", "dg"):
+        table = run_sweep(engine, SweepSpec(apps=tuple(all_apps()),
+                                            scheme=scheme, policy="mean"))
+        for name in all_apps():
+            out[name][scheme] = float(
+                table.filter(app=name).column("err_pct").max())
+    for name, maxerr in out.items():
         _row(f"fig11_maxerr_{name}", round(maxerr["bbv"], 1),
              f"rfv={maxerr['rfv']:.1f};dg={maxerr['dg']:.1f}")
     worst_bbv = max(v["bbv"] for v in out.values())
@@ -365,27 +357,19 @@ def bench_two_phase_sizing() -> dict:
 def bench_gcc_cluster_sensitivity() -> dict:
     """Paper V.B.1: raising gcc's BBV clusters 20 -> 50 collapses the
     centroid-selection error (our dominant-phase mechanism reproduces it)."""
-    import jax as _jax
-
-    from repro.core.clustering import kmeans as _kmeans, random_project
+    from repro.core.clustering import kmeans as _kmeans
     from repro.core.sampling import select_centroid
-    from repro.simcpu import get_bbvs
     t0 = time.time()
     exp = build_experiment("502.gcc_r")
-    pop = get_population("502.gcc_r")
     z = exp.bbv_feats
     out = {}
     for k in (20, 50):
         km = _kmeans(z, k, seed=0)
         w = np.bincount(km.labels, minlength=k) / z.shape[0]
         sel = select_centroid(km.labels, z, km.centroids)
-        errs = []
-        for cfg_i in range(7):
-            est = sum(w[h] * float(exp.cpi(cfg_i, sel[h])[0])
-                      for h in range(k) if sel[h].size)
-            errs.append(100 * abs(est - exp.truth[cfg_i]) /
-                        exp.truth[cfg_i])
-        out[k] = max(errs)
+        ests = exp.weighted_cpi_all(sel, w)        # one batched dispatch
+        errs = 100 * np.abs(ests - exp.truth) / exp.truth
+        out[k] = float(errs.max())
         _row(f"gcc_bbv_maxerr_k{k}", round(out[k], 1),
              "paper: k=50 -> 5.4%")
     _row("gcc_sensitivity_time_s", round(time.time() - t0, 1))
@@ -418,13 +402,9 @@ def bench_approx_phase1() -> dict:
         w = np.bincount(km.labels, minlength=NUM_STRATA) / exp.idx1.size
         sel = [exp.idx1[s] for s in
                select_centroid(km.labels, z, km.centroids)]
-        errs = []
-        for cfg_i in range(7):
-            est = sum(w[h] * float(exp.cpi(cfg_i, sel[h])[0])
-                      for h in range(NUM_STRATA) if sel[h].size)
-            errs.append(100 * abs(est - exp.truth[cfg_i]) /
-                        exp.truth[cfg_i])
-        worst[name] = max(errs)
+        ests = exp.weighted_cpi_all(sel, w)        # one batched dispatch
+        errs = 100 * np.abs(ests - exp.truth) / exp.truth
+        worst[name] = float(errs.max())
         _row(f"approx_phase1_maxerr_{name}", round(worst[name], 1))
     _row("approx_phase1_worst", round(max(worst.values()), 1),
          "approximate-simulator phase 1 (beyond-paper, paper proposes in "
@@ -454,13 +434,9 @@ def bench_isa_features() -> dict:
         w = np.bincount(km.labels, minlength=NUM_STRATA) / exp.idx1.size
         sel = [exp.idx1[s] for s in
                select_centroid(km.labels, z, km.centroids)]
-        errs = []
-        for cfg_i in range(7):
-            est = sum(w[h] * float(exp.cpi(cfg_i, sel[h])[0])
-                      for h in range(NUM_STRATA) if sel[h].size)
-            errs.append(100 * abs(est - exp.truth[cfg_i]) /
-                        exp.truth[cfg_i])
-        worst[name] = max(errs)
+        ests = exp.weighted_cpi_all(sel, w)        # one batched dispatch
+        errs = 100 * np.abs(ests - exp.truth) / exp.truth
+        worst[name] = float(errs.max())
         _row(f"isa_features_maxerr_{name}", round(worst[name], 1))
     _row("isa_features_worst", round(max(worst.values()), 1),
          "ISA-level stratification (beyond-paper, paper proposes in VI.C)")

@@ -38,10 +38,15 @@ def main() -> None:
     }
     if args.only:
         names = args.only.split(",")
+        unknown = [n for n in names if n not in benches]
+        if unknown:
+            sys.exit(f"unknown bench name(s): {', '.join(unknown)}; "
+                     f"choose from: {', '.join(benches)}")
         benches = {k: v for k, v in benches.items() if k in names}
 
     t0 = time.time()
     results = {}
+    errors = []
     for name, fn in benches.items():
         print(f"# === {name} ===", flush=True)
         try:
@@ -49,6 +54,7 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
             results[name] = None
+            errors.append(name)
 
     # ------------------------------------------------ claim validation
     print("# === claim validation (paper vs reproduction) ===")
@@ -93,10 +99,15 @@ def main() -> None:
               f"k=20: {rg.get(20, 0):.1f}% -> k=50: {rg.get(50, 99):.1f}% "
               "(paper: 5.4% at k=50)")
 
+    # a bench that crashed is a failure even if no claim row references it
+    check("no_bench_errors", not errors,
+          "errors in: " + "|".join(errors) if errors else "all benches ran")
+
     print(f"benchmarks_total_s,{time.time()-t0:.1f},")
     print(f"benchmarks_overall,{'PASS' if ok else 'FAIL'},")
-    if not ok:
-        sys.exit(1)
+    # CI contract: any FAILing claim-validation row (or bench error) must
+    # make the process exit non-zero.
+    sys.exit(0 if ok else 1)
 
 
 if __name__ == "__main__":

@@ -1,98 +1,38 @@
 """Shared experiment state for the paper-reproduction benchmarks.
 
-Caches per-application stratifications (expensive k-means runs) across the
-benchmark modules so `python -m benchmarks.run` builds each once.
+The per-app state (stratifications, phase-1 sample, memoized simulator)
+now lives in ``repro.experiments.engine``; this module keeps the historic
+``build_experiment`` entry point as a thin shim over a process-wide
+``ExperimentEngine`` so every benchmark shares one memo table and one set
+of k-means fits.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-
-import jax
 import numpy as np
 
-from repro.core.clustering import Standardizer, kmeans, random_project
-from repro.core.sampling import (dalenius_gurney_strata, draw_srs,
-                                 select_centroid, select_mean, select_random)
-from repro.simcpu import (APP_NAMES, CONFIGS, get_bbvs, get_population,
-                          make_simulator)
+from repro.experiments import (NUM_STRATA, PHASE1_SEED, AppExperiment,
+                               ExperimentEngine, scheme_selection)
+from repro.simcpu import APP_NAMES
 
-NUM_STRATA = 20
-PHASE1_SEED = 42
+__all__ = ["NUM_STRATA", "PHASE1_SEED", "AppExperiment", "all_apps",
+           "build_experiment", "get_engine", "scheme_selection",
+           "weighted_estimate"]
 
-
-@dataclasses.dataclass
-class AppExperiment:
-    name: str
-    sim: object
-    truth: np.ndarray            # (7,) census mean CPI per config
-    census_cpi: dict             # config index -> (N,) cpi
-    # BBV stratification (census, SimPoint-style)
-    bbv_labels: np.ndarray       # (N,)
-    bbv_weights: np.ndarray      # (20,)
-    bbv_feats: np.ndarray        # projected (N, 15)
-    bbv_centroids: np.ndarray
-    # phase-1 sample + RFV stratification
-    idx1: np.ndarray
-    cpi0_1: np.ndarray           # baseline CPI of phase-1 units
-    rfv_z: np.ndarray            # standardized RFVs of phase-1 units
-    rfv_labels: np.ndarray
-    rfv_weights: np.ndarray
-    rfv_centroids: np.ndarray
-    # Dalenius-Gurney on baseline CPI (phase-1 sample)
-    dg_labels: np.ndarray
-    dg_weights: np.ndarray
-
-    def cpi(self, cfg_i: int, indices) -> np.ndarray:
-        return self.sim.simulate_cpi(indices, CONFIGS[cfg_i])
-
-    def census(self, cfg_i: int) -> np.ndarray:
-        if cfg_i not in self.census_cpi:
-            self.census_cpi[cfg_i] = self.sim.census_stats(
-                CONFIGS[cfg_i])["cpi"]
-        return self.census_cpi[cfg_i]
+_ENGINE = ExperimentEngine()
 
 
-@functools.lru_cache(maxsize=None)
+def get_engine() -> ExperimentEngine:
+    return _ENGINE
+
+
 def build_experiment(name: str, kmeans_seed: int = 0) -> AppExperiment:
-    sim = make_simulator(name)
-    pop = sim.pop
-    N = pop.n_regions
-    rng = np.random.default_rng(PHASE1_SEED)
-
-    census0 = sim.census_stats(CONFIGS[0])["cpi"]
-    truth = np.array([sim.true_mean_cpi(c) for c in CONFIGS])
-
-    # SimPoint-style BBV stratification over the full population
-    bbv = get_bbvs(pop)
-    z = np.asarray(random_project(bbv, 15, key=jax.random.PRNGKey(0)))
-    km = kmeans(z, NUM_STRATA, seed=kmeans_seed)
-    bbv_w = np.bincount(km.labels, minlength=NUM_STRATA) / N
-
-    # phase 1: SRS at the paper's Table II size, RFVs on config 0
-    idx1 = draw_srs(rng, N, pop.spec.phase1_n)
-    cpi0_1, rfv = sim.simulate_rfv(idx1, CONFIGS[0])
-    _, zr = Standardizer.fit_transform(rfv)
-    zr = np.asarray(zr)
-    km2 = kmeans(zr, NUM_STRATA, seed=kmeans_seed)
-    rfv_w = np.bincount(km2.labels, minlength=NUM_STRATA) / idx1.size
-
-    dg = dalenius_gurney_strata(cpi0_1, NUM_STRATA)
-    dg_w = np.bincount(dg, minlength=NUM_STRATA) / idx1.size
-
-    return AppExperiment(
-        name=name, sim=sim, truth=truth, census_cpi={0: census0},
-        bbv_labels=km.labels, bbv_weights=bbv_w, bbv_feats=z,
-        bbv_centroids=km.centroids,
-        idx1=idx1, cpi0_1=np.asarray(cpi0_1), rfv_z=zr,
-        rfv_labels=km2.labels, rfv_weights=rfv_w,
-        rfv_centroids=km2.centroids,
-        dg_labels=dg, dg_weights=dg_w)
+    return _ENGINE.app(name, kmeans_seed)
 
 
 def weighted_estimate(selected: list[np.ndarray], cpi: np.ndarray,
                       weights: np.ndarray) -> float:
+    """Stratified weighted mean over concatenated per-stratum CPI values."""
     est, wtot = 0.0, 0.0
     off = 0
     for h, sel in enumerate(selected):
@@ -102,38 +42,6 @@ def weighted_estimate(selected: list[np.ndarray], cpi: np.ndarray,
         wtot += weights[h]
         off += sel.size
     return est / max(wtot, 1e-12)
-
-
-def scheme_selection(exp: AppExperiment, scheme: str, policy: str,
-                     seed: int = 0) -> tuple[list[np.ndarray], np.ndarray]:
-    """Population indices per stratum + weights for a scheme/policy."""
-    if scheme == "bbv":
-        labels, weights = exp.bbv_labels, exp.bbv_weights
-        feats, cents = exp.bbv_feats, exp.bbv_centroids
-        pool = np.arange(labels.shape[0])
-        baseline = exp.census(0)
-    else:
-        labels = exp.rfv_labels if scheme == "rfv" else exp.dg_labels
-        weights = exp.rfv_weights if scheme == "rfv" else exp.dg_weights
-        feats = exp.rfv_z if scheme == "rfv" else exp.cpi0_1[:, None]
-        pool = exp.idx1
-        baseline = exp.cpi0_1
-        if scheme == "dg":
-            cents = np.array([[baseline[labels == h].mean()]
-                              if (labels == h).any() else [np.nan]
-                              for h in range(NUM_STRATA)])
-        else:
-            cents = exp.rfv_centroids
-    if policy == "random":
-        local = select_random(labels, NUM_STRATA,
-                              np.random.default_rng(seed))
-    elif policy == "centroid":
-        local = select_centroid(labels, feats, cents)
-    elif policy == "mean":
-        local = select_mean(labels, baseline, num_strata=NUM_STRATA)
-    else:
-        raise ValueError(policy)
-    return [pool[l] for l in local], weights
 
 
 def all_apps() -> list[str]:

@@ -1,7 +1,8 @@
 """SimPoint (BBV) vs two-phase RFV sampling, head to head.
 
-Reproduces the paper's central comparison on one command: for each scheme,
-select 20 regions, project CPI for all 7 microarchitecture configurations,
+Reproduces the paper's central comparison on one command through the
+batched experiment engine: for each scheme, select 20 regions, project
+CPI for all 7 microarchitecture configurations in ONE vmapped dispatch,
 and print the error against the full-census ground truth.
 
     PYTHONPATH=src python examples/compare_simpoint.py [app]
@@ -9,52 +10,35 @@ and print the error against the full-census ground truth.
 
 import sys
 
-import jax
 import numpy as np
 
-from repro.core.clustering import Standardizer, kmeans, random_project
-from repro.core.sampling import draw_srs, select_centroid
-from repro.simcpu import CONFIGS, get_bbvs, make_simulator
-
-K = 20
+from repro.experiments import ExperimentEngine, scheme_selection
+from repro.simcpu import CONFIGS
 
 
 def main() -> None:
     app = sys.argv[1] if len(sys.argv) > 1 else "557.xz_r"
-    sim = make_simulator(app)
-    pop = sim.pop
-    truth = [sim.true_mean_cpi(c) for c in CONFIGS]
+    engine = ExperimentEngine()
+    exp = engine.app(app)
 
-    # --- SimPoint: BBVs over the whole run, random projection, k-means ----
-    bbv = get_bbvs(pop)
-    z = np.asarray(random_project(bbv, 15, key=jax.random.PRNGKey(0)))
-    km = kmeans(z, K, seed=0)
-    w_bbv = np.bincount(km.labels, minlength=K) / pop.n_regions
-    sel_bbv = select_centroid(km.labels, z, km.centroids)
-
-    # --- two-phase RFV: phase-1 SRS -> RFV k-means -> centroids -----------
-    rng = np.random.default_rng(0)
-    idx1 = draw_srs(rng, pop.n_regions, pop.spec.phase1_n)
-    _, rfv = sim.simulate_rfv(idx1, CONFIGS[0])
-    _, zr = Standardizer.fit_transform(rfv)
-    zr = np.asarray(zr)
-    km2 = kmeans(zr, K, seed=0)
-    w_rfv = np.bincount(km2.labels, minlength=K) / idx1.size
-    sel_rfv = [idx1[s] for s in select_centroid(km2.labels, zr,
-                                                km2.centroids)]
+    ests = {}
+    for scheme in ("bbv", "rfv"):
+        sel, w = scheme_selection(exp, scheme, "centroid")
+        # per-config weighted estimates from ONE batched dispatch over all
+        # 7 configs, served through the region x config memo table
+        ests[scheme] = exp.weighted_cpi_all(sel, w)
 
     print(f"{app}: per-config CPI projection error (20 regions each)")
     print(f"{'config':8s} {'truth':>7s} {'SimPoint/BBV':>14s} "
           f"{'two-phase/RFV':>14s}")
-    for i, cfg in enumerate(CONFIGS):
-        est_b = sum(w_bbv[h] * float(sim.simulate_cpi(sel_bbv[h], cfg)[0])
-                    for h in range(K) if sel_bbv[h].size)
-        est_r = sum(w_rfv[h] * float(sim.simulate_cpi(sel_rfv[h], cfg)[0])
-                    for h in range(K) if sel_rfv[h].size)
-        eb = 100 * abs(est_b - truth[i]) / truth[i]
-        er = 100 * abs(est_r - truth[i]) / truth[i]
-        print(f"config{i:2d} {truth[i]:7.3f} {est_b:7.3f} ({eb:4.1f}%) "
-              f"{est_r:7.3f} ({er:4.1f}%)")
+    for i in range(len(CONFIGS)):
+        eb = 100 * abs(ests["bbv"][i] - exp.truth[i]) / exp.truth[i]
+        er = 100 * abs(ests["rfv"][i] - exp.truth[i]) / exp.truth[i]
+        print(f"config{i:2d} {exp.truth[i]:7.3f} "
+              f"{ests['bbv'][i]:7.3f} ({eb:4.1f}%) "
+              f"{ests['rfv'][i]:7.3f} ({er:4.1f}%)")
+    print(f"simulation cost: {exp.sim.ledger.regions_simulated} region "
+          f"simulations ({exp.sim.hits} cache hits)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Minimal CI: tier-1 tests + a --quick benchmark smoke through the
+# experiment engine. benchmarks/run.py exits non-zero on any FAILing
+# claim-validation row or bench error, so this script's exit code is the
+# CI verdict.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# dev extras (hypothesis property tests) are best-effort: the suite
+# degrades gracefully without them
+pip install -q -r requirements-dev.txt 2>/dev/null || true
+
+python -m pytest -x -q
+python -m benchmarks.run --quick --only fig5_config_sweep,kernels

@@ -1,10 +1,11 @@
 """Clustering for stratification: k-means, random projection, standardize."""
 
-from .kmeans import KMeansResult, best_of, kmeans, kmeans_multi_seed
+from .kmeans import (KMeansResult, best_of, kmeans, kmeans_batch,
+                     kmeans_multi_seed)
 from .random_projection import projection_matrix, random_project
 from .standardize import Standardizer
 
 __all__ = [
-    "kmeans", "kmeans_multi_seed", "best_of", "KMeansResult",
+    "kmeans", "kmeans_batch", "kmeans_multi_seed", "best_of", "KMeansResult",
     "random_project", "projection_matrix", "Standardizer",
 ]

@@ -22,6 +22,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .kmeans import _assign_jnp
 
+# jax >= 0.5 promotes shard_map to the top-level namespace; 0.4.x only has
+# the experimental home. Support both.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def _local_stats(x, centroids, k):
     labels, min_d2 = _assign_jnp(x, centroids)
@@ -40,7 +47,7 @@ def make_distributed_kmeans_step(mesh: Mesh, data_axes: Sequence[str], k: int):
     axes = tuple(data_axes)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(P(axes), P()),
         out_specs=(P(), P()),
     )
@@ -61,7 +68,7 @@ def make_distributed_assign(mesh: Mesh, data_axes: Sequence[str]):
     axes = tuple(data_axes)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(P(axes), P()),
         out_specs=P(axes),
     )

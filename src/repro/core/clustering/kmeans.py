@@ -12,6 +12,10 @@ Design notes
   estimators require.
 * The paper repeats clustering with 10 seeds for the stochastic schemes
   (Fig 7); ``kmeans_multi_seed`` supports that and best-of-N selection.
+* ``kmeans_batch`` vmaps the whole fit over a key axis so multi-seed /
+  multi-restart studies run as ONE batched XLA computation (one compile,
+  one dispatch) instead of a Python loop of fits. ``kmeans_multi_seed``
+  and ``restarts > 1`` route through it.
 """
 
 from __future__ import annotations
@@ -109,6 +113,65 @@ def _kmeans_fit(key: jax.Array, x: jax.Array, k: int, max_iters: int,
     return centroids, labels, min_d2.sum(), iters
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("k", "max_iters", "backend", "tol"))
+def _kmeans_fit_batch(keys: jax.Array, x: jax.Array, k: int, max_iters: int,
+                      backend: str, tol: float):
+    """All fits in one program: vmap ``_kmeans_fit`` over the key axis.
+
+    Under vmap the Lloyd ``while_loop`` runs until every lane converges;
+    already-converged lanes keep their state frozen, so each lane's result
+    is identical to an unbatched fit with the same key.
+    """
+    fit = lambda key: _kmeans_fit(key, x, k, max_iters, backend, tol)
+    return jax.vmap(fit)(keys)
+
+
+def _as_key_batch(keys, seeds) -> jax.Array:
+    if (keys is None) == (seeds is None):
+        raise ValueError("pass exactly one of keys= or seeds=")
+    if keys is None:
+        keys = [jax.random.PRNGKey(int(s)) for s in seeds]
+    if not isinstance(keys, jax.Array):
+        keys = jnp.stack(list(keys))
+    if keys.ndim == 1:
+        keys = keys[None, :]
+    return keys
+
+
+def kmeans_batch(
+    features,
+    k: int,
+    *,
+    keys=None,
+    seeds=None,
+    max_iters: int = 100,
+    backend: str = "jnp",
+    tol: float = 1e-8,
+) -> list[KMeansResult]:
+    """Batched k-means: one fit per key/seed as a single vmapped computation.
+
+    Equivalent to ``[kmeans(features, k, key=key) for key in keys]`` but
+    compiled and dispatched once (the paper's 10-seed repetitions for
+    Figs 7-8 and best-of-N restarts). Returns one ``KMeansResult`` per key,
+    in key order.
+    """
+    x = jnp.asarray(features, dtype=jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"expected (n, d), got {x.shape}")
+    if k < 1 or k > x.shape[0]:
+        raise ValueError(f"k={k} invalid for n={x.shape[0]}")
+    kb = _as_key_batch(keys, seeds)
+    centroids, labels, inertia, iters = _kmeans_fit_batch(
+        kb, x, k, max_iters, backend, tol)
+    centroids, labels = np.asarray(centroids), np.asarray(labels)
+    return [
+        KMeansResult(centroids=centroids[i], labels=labels[i],
+                     inertia=float(inertia[i]), iterations=int(iters[i]))
+        for i in range(kb.shape[0])
+    ]
+
+
 def kmeans(
     features,
     k: int,
@@ -134,25 +197,24 @@ def kmeans(
         raise ValueError(f"k={k} invalid for n={n}")
     if key is None:
         key = jax.random.PRNGKey(seed)
-    best = None
-    for r in range(max(restarts, 1)):
+    if restarts <= 1:
         # restarts=1 consumes the caller's key directly (stable results for
         # seeded single-fit callers); multi-restart splits per attempt.
-        if restarts <= 1:
-            sub = key
-        else:
-            key, sub = jax.random.split(key)
         centroids, labels, inertia, iters = _kmeans_fit(
-            sub, x, k, max_iters, backend, tol)
-        res = KMeansResult(
+            key, x, k, max_iters, backend, tol)
+        return KMeansResult(
             centroids=np.asarray(centroids),
             labels=np.asarray(labels),
             inertia=float(inertia),
             iterations=int(iters),
         )
-        if best is None or res.inertia < best.inertia:
-            best = res
-    return best
+    subs = []
+    for _ in range(restarts):
+        key, sub = jax.random.split(key)
+        subs.append(sub)
+    return best_of(kmeans_batch(x, k, keys=jnp.stack(subs),
+                                max_iters=max_iters, backend=backend,
+                                tol=tol))
 
 
 def kmeans_multi_seed(
@@ -163,12 +225,10 @@ def kmeans_multi_seed(
     max_iters: int = 100,
     backend: str = "jnp",
 ) -> list[KMeansResult]:
-    """One fit per seed (the paper's 10-seed repetitions for Figs 7-8)."""
-    return [
-        kmeans(features, k, key=jax.random.PRNGKey(s), max_iters=max_iters,
-               backend=backend)
-        for s in seeds
-    ]
+    """One fit per seed (the paper's 10-seed repetitions for Figs 7-8),
+    batched into a single vmapped computation."""
+    return kmeans_batch(features, k, seeds=list(seeds), max_iters=max_iters,
+                        backend=backend)
 
 
 def best_of(results: list[KMeansResult]) -> KMeansResult:

@@ -10,6 +10,7 @@ serve as conservative bounds (paper Section III).
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -91,11 +92,18 @@ def weighted_point_estimate(
     selected: list[np.ndarray],
     y: np.ndarray,
     weights: np.ndarray,
+    *,
+    strict: bool = False,
 ) -> float:
     """SimPoint-style weighted mean over deterministically selected units.
 
     ``weights[h]`` = W_h; multiple units per stratum are averaged within the
     stratum before weighting.
+
+    When strata with positive weight have no selected units, the estimate
+    is renormalized by the covered weight — which silently *biases* it
+    toward the covered strata. With ``strict=True`` that condition raises;
+    by default it emits a ``UserWarning`` so callers can no longer miss it.
     """
     mean = 0.0
     total_w = 0.0
@@ -106,4 +114,12 @@ def weighted_point_estimate(
         total_w += weights[h]
     if total_w <= 0:
         raise ValueError("no strata selected")
+    covered = total_w / float(np.sum(weights))
+    if covered < 1.0 - 1e-6:
+        msg = (f"selected units cover only {covered:.4f} of the stratum "
+               "weight; renormalizing biases the estimate toward the "
+               "covered strata")
+        if strict:
+            raise ValueError(msg)
+        warnings.warn(msg, UserWarning, stacklevel=2)
     return mean / total_w

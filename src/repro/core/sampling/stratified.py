@@ -32,12 +32,21 @@ def summarize_strata(
     allocation / post-stratification of a random sample).
     Strata with no sampled units get n=0 summaries (mean/var NaN) so callers
     can detect incomplete designs.
+
+    With ``num_strata=None``, L comes from ``len(weights)`` when weights are
+    given (trailing strata may legitimately have no sampled units); only
+    when both are omitted is L inferred from the observed labels.
     """
     yv = as_float_array(y)
     sv = np.asarray(strata)
     if yv.shape[0] != sv.shape[0]:
         raise ValueError("y and strata must align")
-    L = int(num_strata if num_strata is not None else (sv.max() + 1 if sv.size else 0))
+    if num_strata is not None:
+        L = int(num_strata)
+    elif weights is not None:
+        L = len(weights)
+    else:
+        L = int(sv.max() + 1) if sv.size else 0
     if weights is None:
         counts = np.bincount(sv, minlength=L).astype(np.float64)
         weights = counts / max(counts.sum(), 1.0)

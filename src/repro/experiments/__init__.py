@@ -1,0 +1,17 @@
+"""Batched experiment engine (vmapped configs + seeds, memoized simulation).
+
+``ExperimentEngine`` builds per-app state once (census truth via one
+vmapped all-config dispatch, phase-1 sample, BBV/RFV/DG stratifications)
+on top of ``CachedSimulator``; ``run_sweep(engine, SweepSpec(...))``
+drives apps × configs × schemes through the batched paths.
+"""
+
+from .engine import (NUM_STRATA, PHASE1_SEED, AppExperiment,
+                     ExperimentEngine, scheme_selection)
+from .sweep import ResultsTable, SweepRow, SweepSpec, run_sweep
+
+__all__ = [
+    "ExperimentEngine", "AppExperiment", "scheme_selection",
+    "SweepSpec", "SweepRow", "ResultsTable", "run_sweep",
+    "NUM_STRATA", "PHASE1_SEED",
+]

@@ -1,0 +1,209 @@
+"""Batched experiment engine over the synthetic simulation substrate.
+
+One ``ExperimentEngine`` owns, per application, an ``AppExperiment``: a
+``CachedSimulator`` (region × config memo, miss-only cost accounting), the
+census ground truth for every config (computed as ONE vmapped dispatch over
+the stacked config matrix), and the paper's three stratifications (BBV,
+RFV, Dalenius-Gurney). Sweeps over (app × config × scheme) then run through
+``AppExperiment.cpi_all`` — one batched XLA program per region set instead
+of C sequential dispatches — and through the memo table, so a region is
+charged once per config no matter how many figures touch it.
+
+This used to live in ``benchmarks/simcpu_common.py`` as nested Python
+loops; ``benchmarks/simcpu_common`` now re-exports from here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..core.clustering import (Standardizer, kmeans, kmeans_batch,
+                               random_project)
+from ..core.sampling import (dalenius_gurney_strata, draw_srs,
+                             select_centroid, select_mean, select_random)
+from ..simcpu import (APP_NAMES, CONFIGS, CachedSimulator, cpi_batch,
+                      get_bbvs, make_cached_simulator)
+
+NUM_STRATA = 20
+PHASE1_SEED = 42
+
+
+@dataclasses.dataclass
+class AppExperiment:
+    """Per-application state shared by every figure/sweep."""
+
+    name: str
+    sim: CachedSimulator
+    configs: tuple                # the sweep's config axis
+    truth: np.ndarray             # (C,) census mean CPI per config
+    census_mat: np.ndarray        # (C, N) census CPI (analysis-only)
+    # BBV stratification (census, SimPoint-style)
+    bbv_labels: np.ndarray        # (N,)
+    bbv_weights: np.ndarray       # (L,)
+    bbv_feats: np.ndarray         # projected (N, 15)
+    bbv_centroids: np.ndarray
+    # phase-1 sample + RFV stratification
+    idx1: np.ndarray
+    cpi0_1: np.ndarray            # baseline CPI of phase-1 units
+    rfv_z: np.ndarray             # standardized RFVs of phase-1 units
+    rfv_labels: np.ndarray
+    rfv_weights: np.ndarray
+    rfv_centroids: np.ndarray
+    # Dalenius-Gurney on baseline CPI (phase-1 sample)
+    dg_labels: np.ndarray
+    dg_weights: np.ndarray
+    num_strata: int = NUM_STRATA
+
+    def cpi(self, cfg_i: int, indices) -> np.ndarray:
+        """(n,) CPI for one config, through the memo table."""
+        return self.sim.simulate_cpi(indices, self.configs[cfg_i])
+
+    def cpi_for(self, indices,
+                config_indices: Optional[Sequence[int]] = None) -> np.ndarray:
+        """(C', n) CPI for a config subset in one batched dispatch.
+
+        Only the requested configs are simulated (and ledger-charged)."""
+        cfgs = (self.configs if config_indices is None
+                else tuple(self.configs[i] for i in config_indices))
+        return self.sim.simulate_cpi_batch(indices, cfgs)
+
+    def cpi_all(self, indices) -> np.ndarray:
+        """(C, n) CPI across ALL configs in one batched dispatch."""
+        return self.cpi_for(indices)
+
+    def weighted_cpi_all(self, selected: Sequence[np.ndarray], weights,
+                         *, config_indices: Optional[Sequence[int]] = None,
+                         strict: bool = False) -> np.ndarray:
+        """(C',) stratified weighted-mean CPI per config, one dispatch.
+
+        ``selected``: per-stratum population index arrays (any count per
+        stratum). Strata with no selected units renormalize the estimate
+        by the covered weight — with the same warn/raise contract as
+        ``weighted_point_estimate`` so the bias can't pass silently.
+        """
+        weights = np.asarray(weights, np.float64)
+        sel = [np.atleast_1d(np.asarray(s)) for s in selected]
+        flat = np.concatenate([s for s in sel if s.size])
+        seg = np.concatenate([np.full(s.size, h, np.int64)
+                              for h, s in enumerate(sel) if s.size])
+        counts = np.bincount(seg, minlength=len(sel))
+        covered = float(weights[counts > 0].sum())
+        total = float(weights.sum())
+        if covered < total * (1.0 - 1e-6):
+            msg = (f"selected units cover only {covered / total:.4f} of the "
+                   "stratum weight; renormalizing biases the estimate "
+                   "toward the covered strata")
+            if strict:
+                raise ValueError(msg)
+            warnings.warn(msg, UserWarning, stacklevel=2)
+        mat = self.cpi_for(flat, config_indices)
+        w_per_unit = np.where(counts[seg] > 0,
+                              weights[seg] / np.maximum(counts[seg], 1), 0.0)
+        return (mat * w_per_unit[None, :]).sum(axis=1) / covered
+
+    def census(self, cfg_i: int) -> np.ndarray:
+        return self.census_mat[cfg_i]
+
+
+class ExperimentEngine:
+    """Builds and memoizes ``AppExperiment`` state; runs batched sweeps."""
+
+    def __init__(self, *, configs: Sequence = CONFIGS,
+                 num_strata: int = NUM_STRATA,
+                 phase1_seed: int = PHASE1_SEED):
+        self.configs = tuple(configs)
+        self.num_strata = num_strata
+        self.phase1_seed = phase1_seed
+        self._apps: dict[tuple[str, int], AppExperiment] = {}
+
+    def app(self, name: str, kmeans_seed: int = 0) -> AppExperiment:
+        key = (name, kmeans_seed)
+        if key not in self._apps:
+            self._apps[key] = self._build(name, kmeans_seed)
+        return self._apps[key]
+
+    def apps(self, names: Optional[Sequence[str]] = None
+             ) -> list[AppExperiment]:
+        return [self.app(n) for n in (names or APP_NAMES)]
+
+    def _build(self, name: str, kmeans_seed: int) -> AppExperiment:
+        L = self.num_strata
+        sim = make_cached_simulator(name)
+        pop = sim.pop
+        N = pop.n_regions
+        rng = np.random.default_rng(self.phase1_seed)
+
+        # census ground truth for every config: one vmapped program
+        # (analysis-only — free of charge, bypasses the charged memo)
+        census_mat = cpi_batch(pop.features, self.configs)
+        truth = census_mat.mean(axis=1, dtype=np.float64)
+
+        # SimPoint-style BBV stratification over the full population
+        bbv = get_bbvs(pop)
+        z = np.asarray(random_project(bbv, 15, key=jax.random.PRNGKey(0)))
+        km = kmeans(z, L, seed=kmeans_seed)
+        bbv_w = np.bincount(km.labels, minlength=L) / N
+
+        # phase 1: SRS at the paper's Table II size, RFVs on config 0
+        idx1 = draw_srs(rng, N, pop.spec.phase1_n)
+        cpi0_1, rfv = sim.simulate_rfv(idx1, self.configs[0])
+        _, zr = Standardizer.fit_transform(rfv)
+        zr = np.asarray(zr)
+        km2 = kmeans(zr, L, seed=kmeans_seed)
+        rfv_w = np.bincount(km2.labels, minlength=L) / idx1.size
+
+        dg = dalenius_gurney_strata(cpi0_1, L)
+        dg_w = np.bincount(dg, minlength=L) / idx1.size
+
+        return AppExperiment(
+            name=name, sim=sim, configs=self.configs,
+            truth=truth, census_mat=census_mat,
+            bbv_labels=km.labels, bbv_weights=bbv_w, bbv_feats=z,
+            bbv_centroids=km.centroids,
+            idx1=idx1, cpi0_1=np.asarray(cpi0_1), rfv_z=zr,
+            rfv_labels=km2.labels, rfv_weights=rfv_w,
+            rfv_centroids=km2.centroids,
+            dg_labels=dg, dg_weights=dg_w, num_strata=L)
+
+    # multi-seed stratification (paper Figs 7-8): one vmapped computation
+    def rfv_stratifications(self, name: str, seeds: Sequence[int]):
+        """k-means RFV fits for many clustering seeds as one batched fit."""
+        exp = self.app(name)
+        return kmeans_batch(exp.rfv_z, self.num_strata, seeds=list(seeds))
+
+
+def scheme_selection(exp: AppExperiment, scheme: str, policy: str,
+                     seed: int = 0) -> tuple[list[np.ndarray], np.ndarray]:
+    """Population indices per stratum + weights for a scheme/policy."""
+    L = exp.num_strata
+    if scheme == "bbv":
+        labels, weights = exp.bbv_labels, exp.bbv_weights
+        feats, cents = exp.bbv_feats, exp.bbv_centroids
+        pool = np.arange(labels.shape[0])
+        baseline = exp.census(0)
+    else:
+        labels = exp.rfv_labels if scheme == "rfv" else exp.dg_labels
+        weights = exp.rfv_weights if scheme == "rfv" else exp.dg_weights
+        feats = exp.rfv_z if scheme == "rfv" else exp.cpi0_1[:, None]
+        pool = exp.idx1
+        baseline = exp.cpi0_1
+        if scheme == "dg":
+            cents = np.array([[baseline[labels == h].mean()]
+                              if (labels == h).any() else [np.nan]
+                              for h in range(L)])
+        else:
+            cents = exp.rfv_centroids
+    if policy == "random":
+        local = select_random(labels, L, np.random.default_rng(seed))
+    elif policy == "centroid":
+        local = select_centroid(labels, feats, cents)
+    elif policy == "mean":
+        local = select_mean(labels, baseline, num_strata=L)
+    else:
+        raise ValueError(policy)
+    return [pool[l] for l in local], weights

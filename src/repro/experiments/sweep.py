@@ -1,0 +1,132 @@
+"""Declarative sweeps: ``SweepSpec`` -> results table.
+
+A sweep is the cross product (apps × configs) for one estimation scheme:
+
+* ``scheme="srs"`` — phase-1 simple-random-sample estimate per config
+  (paper Fig 5), with its 95 % margin.
+* ``scheme in {"bbv", "rfv", "dg"}`` — stratified selection (paper
+  Figs 10/11): pick units per stratum under ``policy``, project CPI for
+  every config, weight by stratum weights.
+
+The driver simulates each app's region set across ALL configs as one
+batched dispatch (``AppExperiment.cpi_all``) and serves repeats from the
+simulator memo, replacing the per-(config, app) Python loops the
+benchmarks used to run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core.sampling import srs_estimate
+from ..simcpu import APP_NAMES
+from .engine import ExperimentEngine, scheme_selection
+
+SCHEMES = ("srs", "bbv", "rfv", "dg")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """One sweep = apps × configs for a single scheme/policy."""
+
+    apps: tuple[str, ...] = tuple(APP_NAMES)
+    scheme: str = "srs"                      # "srs" | "bbv" | "rfv" | "dg"
+    policy: Optional[str] = None             # selection policy (non-srs)
+    config_indices: Optional[tuple[int, ...]] = None   # None = all engine configs
+    selection_seed: int = 0                  # rng seed for policy="random"
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme!r}")
+        if self.scheme != "srs" and self.policy is None:
+            object.__setattr__(self, "policy", "centroid")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRow:
+    app: str
+    scheme: str
+    config_index: int
+    estimate: float       # estimated mean CPI
+    truth: float          # census mean CPI
+    err_pct: float        # 100 * |estimate - truth| / truth
+    n_units: int          # regions the estimate is built from
+    margin_pct: Optional[float] = None   # 95% margin (srs scheme only)
+
+
+class ResultsTable:
+    """Thin list-of-rows wrapper with filter/column helpers."""
+
+    def __init__(self, rows: Sequence[SweepRow]):
+        self.rows = list(rows)
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    def filter(self, **fields) -> "ResultsTable":
+        return ResultsTable([
+            r for r in self.rows
+            if all(getattr(r, k) == v for k, v in fields.items())])
+
+    def column(self, field: str) -> np.ndarray:
+        return np.asarray([getattr(r, field) for r in self.rows])
+
+    def matrix(self, field: str = "estimate") -> np.ndarray:
+        """(C, A) matrix of ``field`` over config × app, in spec order."""
+        configs = sorted({r.config_index for r in self.rows})
+        apps = list(dict.fromkeys(r.app for r in self.rows))
+        out = np.full((len(configs), len(apps)), np.nan)
+        ci = {c: i for i, c in enumerate(configs)}
+        ai = {a: j for j, a in enumerate(apps)}
+        for r in self.rows:
+            out[ci[r.config_index], ai[r.app]] = getattr(r, field)
+        return out
+
+    def to_csv(self) -> str:
+        hdr = "app,scheme,config_index,estimate,truth,err_pct,n_units,margin_pct"
+        lines = [hdr]
+        for r in self.rows:
+            m = "" if r.margin_pct is None else f"{r.margin_pct:.4f}"
+            lines.append(f"{r.app},{r.scheme},{r.config_index},"
+                         f"{r.estimate:.6f},{r.truth:.6f},{r.err_pct:.4f},"
+                         f"{r.n_units},{m}")
+        return "\n".join(lines)
+
+
+def run_sweep(engine: ExperimentEngine, spec: SweepSpec) -> ResultsTable:
+    """Execute one sweep; one batched dispatch per app over the requested
+    configs (only those are simulated and ledger-charged)."""
+    cfg_is = (tuple(range(len(engine.configs)))
+              if spec.config_indices is None else spec.config_indices)
+    rows: list[SweepRow] = []
+    for name in spec.apps:
+        exp = engine.app(name)
+        if spec.scheme == "srs":
+            mat = exp.cpi_for(exp.idx1, cfg_is)            # (C', n1)
+            for pos, ci in enumerate(cfg_is):
+                est = srs_estimate(mat[pos])
+                rows.append(SweepRow(
+                    app=name, scheme="srs", config_index=ci,
+                    estimate=est.mean, truth=float(exp.truth[ci]),
+                    err_pct=100 * abs(est.mean - exp.truth[ci])
+                    / exp.truth[ci],
+                    n_units=exp.idx1.size, margin_pct=est.margin_pct))
+            continue
+        sel, weights = scheme_selection(exp, spec.scheme, spec.policy,
+                                        seed=spec.selection_seed)
+        ests = exp.weighted_cpi_all(sel, weights, config_indices=cfg_is)
+        n_sel = int(sum(s.size for s in sel))
+        for pos, ci in enumerate(cfg_is):
+            rows.append(SweepRow(
+                app=name, scheme=spec.scheme, config_index=ci,
+                estimate=float(ests[pos]), truth=float(exp.truth[ci]),
+                err_pct=float(100 * abs(ests[pos] - exp.truth[ci])
+                              / exp.truth[ci]),
+                n_units=n_sel, margin_pct=None))
+    return ResultsTable(rows)

@@ -1,7 +1,9 @@
 """Synthetic CPU-simulation substrate (stands in for gem5 + SPECint 2017)."""
 
 from .bbv import NUM_BLOCKS, get_bbvs, synthesize_bbvs
-from .perfmodel import cpi_only, evaluate_regions, stats_matrix
+from .cache import CachedSimulator, make_cached_simulator
+from .perfmodel import (config_matrix, cpi_batch, cpi_only, evaluate_regions,
+                        evaluate_regions_batch, stats_matrix)
 from .simulator import CycleAccurateSimulator, Ledger, make_simulator
 from .uarch import BASELINE, CONFIGS, UarchConfig
 from .workload import (APP_NAMES, APP_SPECS, REGION_LEN_INSTR, AppPopulation,
@@ -11,7 +13,9 @@ __all__ = [
     "UarchConfig", "CONFIGS", "BASELINE",
     "AppSpec", "AppPopulation", "APP_SPECS", "APP_NAMES",
     "generate_population", "get_population", "REGION_LEN_INSTR",
-    "evaluate_regions", "cpi_only", "stats_matrix",
+    "evaluate_regions", "evaluate_regions_batch", "cpi_batch", "cpi_only",
+    "config_matrix", "stats_matrix",
     "synthesize_bbvs", "get_bbvs", "NUM_BLOCKS",
     "CycleAccurateSimulator", "Ledger", "make_simulator",
+    "CachedSimulator", "make_cached_simulator",
 ]

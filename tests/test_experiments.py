@@ -1,0 +1,258 @@
+"""Batched experiment engine tests: batched-vs-sequential equivalence,
+memoizing simulator cost accounting, and the sweep driver."""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.clustering import kmeans, kmeans_batch
+from repro.core.sampling import (StratumSummary, summarize_strata,
+                                 weighted_point_estimate)
+from repro.experiments import ExperimentEngine, SweepSpec, run_sweep
+from repro.simcpu import (CONFIGS, REGION_LEN_INSTR, evaluate_regions,
+                          evaluate_regions_batch, cpi_batch,
+                          get_population, make_cached_simulator,
+                          make_simulator)
+
+APP = "505.mcf_r"       # smallest population: fast to build
+
+
+# ------------------------------------------------- batched perf model
+def test_evaluate_regions_batch_matches_per_config():
+    """The acceptance-criterion equivalence: one vmapped program over the
+    stacked (C, 14) config matrix == C sequential evaluations."""
+    feats = get_population(APP).features[:400]
+    batch = evaluate_regions_batch(feats, CONFIGS)
+    for i, cfg in enumerate(CONFIGS):
+        single = evaluate_regions(feats, cfg)
+        assert set(batch) == set(single)
+        for metric in single:
+            assert batch[metric].shape == (len(CONFIGS), 400)
+            np.testing.assert_allclose(batch[metric][i], single[metric],
+                                       rtol=1e-5, atol=1e-6,
+                                       err_msg=f"{cfg.name}:{metric}")
+
+
+def test_cpi_batch_matches_and_respects_indices():
+    feats = get_population(APP).features
+    idx = np.array([5, 17, 200, 3])
+    mat = cpi_batch(feats, CONFIGS, idx)
+    assert mat.shape == (7, 4)
+    np.testing.assert_allclose(
+        mat[2], evaluate_regions(feats, CONFIGS[2], idx)["cpi"],
+        rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------- batched k-means
+def test_kmeans_batch_matches_per_seed_fits():
+    rng = np.random.default_rng(0)
+    x = np.concatenate([rng.normal(3.0 * i, 0.4, (60, 5)) for i in range(4)])
+    seeds = [0, 1, 2, 7]
+    batch = kmeans_batch(x, 4, seeds=seeds)
+    assert len(batch) == len(seeds)
+    for s, res in zip(seeds, batch):
+        single = kmeans(x, 4, key=jax.random.PRNGKey(s))
+        np.testing.assert_array_equal(res.labels, single.labels)
+        np.testing.assert_allclose(res.centroids, single.centroids,
+                                   rtol=1e-5, atol=1e-6)
+        assert res.inertia == pytest.approx(single.inertia, rel=1e-5)
+
+
+def test_kmeans_batch_validates_key_args():
+    x = np.random.default_rng(1).normal(size=(50, 3))
+    with pytest.raises(ValueError):
+        kmeans_batch(x, 3)                       # neither keys nor seeds
+    with pytest.raises(ValueError):
+        kmeans_batch(x, 3, seeds=[0], keys=jax.random.PRNGKey(0))
+
+
+def test_kmeans_restarts_picks_best_of_batch():
+    x = np.random.default_rng(2).normal(size=(120, 4))
+    best = kmeans(x, 5, seed=3, restarts=4)
+    assert np.isfinite(best.inertia)
+    # best-of cannot be worse than a single fit from the same root key
+    key = jax.random.PRNGKey(3)
+    _, sub = jax.random.split(key)
+    assert best.inertia <= kmeans(x, 5, key=sub).inertia + 1e-6
+
+
+# ------------------------------------------------- memoizing simulator
+def test_cached_simulator_second_simulation_is_free():
+    sim = make_cached_simulator(APP)
+    idx = np.arange(25)
+    first = sim.simulate_cpi(idx, CONFIGS[0])
+    assert sim.ledger.regions_simulated == 25
+    second = sim.simulate_cpi(idx, CONFIGS[0])
+    assert sim.ledger.regions_simulated == 25        # zero new charges
+    assert sim.hits == 25
+    np.testing.assert_array_equal(first, second)
+    # a different config is a different memo row: charged again
+    sim.simulate_cpi(idx, CONFIGS[1])
+    assert sim.ledger.regions_simulated == 50
+    assert sim.ledger.instructions_simulated == 50 * REGION_LEN_INSTR
+
+
+def test_cached_simulator_charges_unique_regions_only():
+    sim = make_cached_simulator(APP)
+    sim.simulate_cpi([3, 3, 3, 9], CONFIGS[0])
+    assert sim.ledger.regions_simulated == 2         # {3, 9}
+
+
+def test_cached_simulator_batch_charges_per_config_misses():
+    sim = make_cached_simulator(APP)
+    sim.simulate_cpi(np.arange(10), CONFIGS[0])      # pre-warm config 0
+    mat = sim.simulate_cpi_batch(np.arange(10), CONFIGS)
+    assert mat.shape == (7, 10)
+    # config 0 fully cached; the other 6 configs charged 10 each
+    assert sim.ledger.regions_simulated == 10 + 6 * 10
+    base = make_simulator(APP)
+    for i, cfg in enumerate(CONFIGS):
+        np.testing.assert_allclose(
+            mat[i], base.simulate_cpi(np.arange(10), cfg),
+            rtol=1e-5, atol=1e-6)
+
+
+def test_cached_simulator_census_stays_off_the_books():
+    sim = make_cached_simulator(APP)
+    sim.census_stats(CONFIGS[0])
+    assert sim.ledger.regions_simulated == 0
+    # and the census does NOT pre-populate the charged memo
+    sim.simulate_cpi(np.arange(5), CONFIGS[0])
+    assert sim.ledger.regions_simulated == 5
+
+
+def test_cached_simulator_matches_uncached_stats():
+    cached = make_cached_simulator(APP)
+    base = make_simulator(APP)
+    idx = np.array([0, 11, 42, 999])
+    a = cached.simulate(idx, CONFIGS[4])
+    b = base.simulate(idx, CONFIGS[4])
+    assert set(a) == set(b)
+    for metric in b:
+        np.testing.assert_allclose(a[metric], b[metric],
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------- engine + sweeps
+@pytest.fixture(scope="module")
+def engine():
+    eng = ExperimentEngine()
+    eng.app(APP)            # build once for the whole module
+    return eng
+
+
+def test_engine_truth_matches_census(engine):
+    exp = engine.app(APP)
+    base = make_simulator(APP)
+    for i, cfg in enumerate(CONFIGS):
+        assert exp.truth[i] == pytest.approx(base.true_mean_cpi(cfg),
+                                             rel=1e-5)
+
+
+def test_srs_sweep_matches_sequential(engine):
+    from repro.core.sampling import srs_estimate
+    table = run_sweep(engine, SweepSpec(apps=(APP,), scheme="srs"))
+    assert len(table) == len(CONFIGS)
+    exp = engine.app(APP)
+    for row in table:
+        est = srs_estimate(exp.cpi(row.config_index, exp.idx1))
+        assert row.estimate == pytest.approx(est.mean, rel=1e-6)
+        assert row.margin_pct == pytest.approx(est.margin_pct, rel=1e-6)
+
+
+def test_stratified_sweep_matches_sequential(engine):
+    from repro.experiments import scheme_selection
+    table = run_sweep(engine, SweepSpec(apps=(APP,), scheme="rfv",
+                                        policy="centroid"))
+    exp = engine.app(APP)
+    sel, w = scheme_selection(exp, "rfv", "centroid")
+    flat = np.concatenate([s for s in sel if s.size])
+    for row in table:
+        cpi = exp.cpi(row.config_index, flat)
+        est, wt, off = 0.0, 0.0, 0
+        for h, s in enumerate(sel):
+            if s.size == 0:
+                continue
+            est += w[h] * cpi[off:off + s.size].mean()
+            wt += w[h]
+            off += s.size
+        assert row.estimate == pytest.approx(est / wt, rel=1e-6)
+        assert row.truth == pytest.approx(float(exp.truth[row.config_index]),
+                                          rel=1e-9)
+
+
+def test_sweep_config_subset_charges_only_those_configs():
+    eng = ExperimentEngine()
+    exp = eng.app(APP)
+    before = exp.sim.ledger.regions_simulated
+    run_sweep(eng, SweepSpec(apps=(APP,), scheme="srs",
+                             config_indices=(0, 6)))
+    # config 0 was fully simulated in phase 1 (cache hits); only config 6
+    # costs anything — configs 1-5 must not be touched at all
+    assert exp.sim.ledger.regions_simulated - before == exp.idx1.size
+
+
+def test_weighted_cpi_all_matches_loop_and_warns(engine):
+    exp = engine.app(APP)
+    sel = [np.array([h]) for h in range(4)]
+    w = np.full(4, 0.25)
+    ests = exp.weighted_cpi_all(sel, w)
+    assert ests.shape == (len(CONFIGS),)
+    for ci in range(len(CONFIGS)):
+        manual = sum(w[h] * float(exp.cpi(ci, sel[h])[0]) for h in range(4))
+        assert ests[ci] == pytest.approx(manual, rel=1e-6)
+    partial = [np.array([0]), np.empty(0, np.int64)]
+    with pytest.warns(UserWarning, match="cover only"):
+        exp.weighted_cpi_all(partial, np.array([0.5, 0.5]))
+    with pytest.raises(ValueError, match="cover only"):
+        exp.weighted_cpi_all(partial, np.array([0.5, 0.5]), strict=True)
+
+
+def test_sweep_spec_rejects_unknown_scheme():
+    with pytest.raises(ValueError):
+        SweepSpec(apps=(APP,), scheme="bogus")
+
+
+def test_results_table_helpers(engine):
+    table = run_sweep(engine, SweepSpec(apps=(APP,), scheme="srs",
+                                        config_indices=(0, 6)))
+    assert len(table.filter(config_index=6)) == 1
+    assert table.matrix("estimate").shape == (2, 1)
+    assert table.to_csv().count("\n") == len(table)
+
+
+def test_multi_seed_stratifications_batched(engine):
+    fits = engine.rfv_stratifications(APP, seeds=range(3))
+    assert len(fits) == 3
+    exp = engine.app(APP)
+    for fit in fits:
+        assert fit.labels.shape == exp.rfv_labels.shape
+        assert np.unique(fit.labels).size == exp.num_strata
+
+
+# ------------------------------------------------- satellite bugfixes
+def test_weighted_point_estimate_warns_on_uncovered_weight():
+    y = np.arange(4, dtype=float)
+    w = np.array([0.5, 0.5])
+    full = [np.array([0, 1]), np.array([2, 3])]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")           # full coverage: no warning
+        assert weighted_point_estimate(full, y, w) == pytest.approx(1.5)
+    partial = [np.array([0, 1]), np.array([], dtype=int)]
+    with pytest.warns(UserWarning, match="cover only"):
+        est = weighted_point_estimate(partial, y, w)
+    assert est == pytest.approx(0.5)             # renormalized (biased)
+    with pytest.raises(ValueError, match="cover only"):
+        weighted_point_estimate(partial, y, w, strict=True)
+
+
+def test_summarize_strata_infers_count_from_weights():
+    y = np.array([1.0, 2.0, 3.0, 4.0])
+    labels = np.array([0, 0, 1, 1])              # stratum 2 unobserved
+    w = np.array([0.3, 0.3, 0.4])
+    summ = summarize_strata(y, labels, weights=w)     # num_strata=None
+    assert len(summ) == 3
+    assert summ[2].n == 0                        # trailing empty stratum
+    assert isinstance(summ[0], StratumSummary)

@@ -52,13 +52,17 @@ def test_summarize_totals():
 def test_real_module_collectives_detected():
     """A psum under shard_map must appear as an all-reduce."""
     from jax.sharding import Mesh, PartitionSpec as P
+    if hasattr(jax, "shard_map"):
+        shard_map = jax.shard_map
+    else:  # jax 0.4.x keeps shard_map under jax.experimental
+        from jax.experimental.shard_map import shard_map
     devs = np.array(jax.devices())
     mesh = Mesh(devs.reshape(len(devs)), ("d",))
 
     def f(x):
         return jax.lax.psum(x, "d")
 
-    sf = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
+    sf = shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
     lowered = jax.jit(sf).lower(
         jax.ShapeDtypeStruct((len(jax.devices()) * 4,), jnp.float32))
     txt = lowered.compile().as_text()

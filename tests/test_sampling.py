@@ -1,8 +1,33 @@
-"""Estimator unit + property tests (paper Appendix A formulas)."""
+"""Estimator unit + property tests (paper Appendix A formulas).
+
+The property tests need ``hypothesis`` (pinned in requirements-dev.txt).
+When it is absent the module must still collect — only the property tests
+skip, the plain unit tests keep running.
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # degrade gracefully: skip property tests
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class st:  # noqa: N801 - stand-in for hypothesis.strategies
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+    st = st()
 
 from repro.core.sampling import (collapsed_strata_estimate,
                                  dalenius_gurney_strata, draw_srs,
