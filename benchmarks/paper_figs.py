@@ -15,7 +15,7 @@ from repro.core.sampling import (Estimate, StratumSummary,
                                  phase2_sizes_for_margin, srs_estimate,
                                  stratified_estimate, summarize_strata,
                                  two_phase_estimate)
-from repro.experiments import SweepSpec, run_sweep
+from repro.experiments import SweepSpec, TrialSpec, run_sweep, run_trials
 from repro.simcpu import CONFIGS
 
 from .simcpu_common import (NUM_STRATA, all_apps, build_experiment,
@@ -33,8 +33,9 @@ def bench_cpi_distributions() -> dict:
     regions) lowers dispersion."""
     t0 = time.time()
     out = {}
-    for name in all_apps():
-        exp = build_experiment(name)
+    # one batched-over-app build for everything downstream
+    for exp in get_engine().apps(all_apps()):
+        name = exp.name
         cpi = exp.census(0)
         cvs = []
         for agg in (1, 10, 100):
@@ -141,33 +142,18 @@ def bench_ci_analytical() -> dict:
 
 # ---------------------------------------------------------------------- Fig 8
 def bench_ci_empirical(trials: int = 1000) -> dict:
-    """Fig 8: Monte-Carlo 95th-percentile |error| at n=20 per scheme."""
+    """Fig 8: Monte-Carlo 95th-percentile |error| at n=20 per scheme.
+
+    Runs through ``run_trials``: ONE vmapped (app-sharded when a mesh is
+    configured) dispatch per scheme over the (app, trial, stratum) axes —
+    the historic per-app, per-stratum numpy loops are gone."""
     t0 = time.time()
-    rng = np.random.default_rng(7)
+    res = run_trials(get_engine(), TrialSpec(trials=trials),
+                     apps=tuple(all_apps()))
     results = {}
-    for name in all_apps():
-        exp = build_experiment(name)
-        cpi6_census = exp.census(6)
-        cpi6_p1 = exp.cpi(6, exp.idx1)
-        truth = exp.truth[6]
-        errs = {"random": [], "bbv": [], "rfv": [], "dg": []}
-        # vectorized random-sampling trials
-        draws = rng.choice(cpi6_census, size=(trials, 20))
-        errs["random"] = 100 * np.abs(draws.mean(1) - truth) / truth
-        for scheme, labels, weights, pool_cpi in (
-                ("bbv", exp.bbv_labels, exp.bbv_weights, cpi6_census),
-                ("rfv", exp.rfv_labels, exp.rfv_weights, cpi6_p1),
-                ("dg", exp.dg_labels, exp.dg_weights, cpi6_p1)):
-            per_stratum = [pool_cpi[labels == h] for h in range(NUM_STRATA)]
-            ests = np.zeros(trials)
-            for h, vals in enumerate(per_stratum):
-                if vals.size == 0:
-                    continue
-                pick = rng.integers(0, vals.size, trials)
-                ests += weights[h] * vals[pick]
-            errs[scheme] = 100 * np.abs(ests - truth) / truth
-        results[name] = {k: float(np.percentile(v, 95))
-                         for k, v in errs.items()}
+    for a, name in enumerate(res.apps):
+        results[name] = {k: float(np.percentile(res.errors[k][a], 95))
+                         for k in res.errors}
         r = results[name]
         _row(f"fig8_p95err_{name}", round(r["random"], 1),
              f"bbv={r['bbv']:.1f};rfv={r['rfv']:.1f};dg={r['dg']:.1f}")

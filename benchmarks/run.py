@@ -7,8 +7,21 @@ Prints ``name,value,derived`` CSV and a final claim-validation summary.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+
+def _force_devices(n: int) -> None:
+    """Set the XLA host-device flag; must run BEFORE any jax import."""
+    if n < 1:
+        sys.exit(f"--devices must be >= 1, got {n}")
+    if "jax" in sys.modules:
+        sys.exit("--devices must take effect before jax is imported; "
+                 "set XLA_FLAGS=--xla_force_host_platform_device_count="
+                 f"{n} in the environment instead")
+    flag = f"--xla_force_host_platform_device_count={n}"
+    os.environ["XLA_FLAGS"] = f"{os.environ.get('XLA_FLAGS', '')} {flag}".strip()
 
 
 def main() -> None:
@@ -16,7 +29,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N XLA host devices (app-sharded sweeps); "
+                    "must be set before jax initializes")
     args = ap.parse_args()
+
+    if args.devices is not None:
+        _force_devices(args.devices)
 
     from . import kernels_bench, paper_figs
 

@@ -1,13 +1,17 @@
 """Shared experiment state for the paper-reproduction benchmarks.
 
 The per-app state (stratifications, phase-1 sample, memoized simulator)
-now lives in ``repro.experiments.engine``; this module keeps the historic
+lives in ``repro.experiments.engine``; this module keeps the historic
 ``build_experiment`` entry point as a thin shim over a process-wide
-``ExperimentEngine`` so every benchmark shares one memo table and one set
-of k-means fits.
+``ExperimentEngine`` so every benchmark shares one memo bank and one set
+of k-means fits. When more than one device is available (e.g. via
+``benchmarks/run.py --devices N``) the engine gets an ``("app",)`` mesh
+and every batched dispatch is sharded over the app axis.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
@@ -19,15 +23,18 @@ __all__ = ["NUM_STRATA", "PHASE1_SEED", "AppExperiment", "all_apps",
            "build_experiment", "get_engine", "scheme_selection",
            "weighted_estimate"]
 
-_ENGINE = ExperimentEngine()
+_ENGINE: Optional[ExperimentEngine] = None
 
 
 def get_engine() -> ExperimentEngine:
+    global _ENGINE
+    if _ENGINE is None:
+        _ENGINE = ExperimentEngine.auto()
     return _ENGINE
 
 
 def build_experiment(name: str, kmeans_seed: int = 0) -> AppExperiment:
-    return _ENGINE.app(name, kmeans_seed)
+    return get_engine().app(name, kmeans_seed)
 
 
 def weighted_estimate(selected: list[np.ndarray], cpi: np.ndarray,

@@ -1,44 +1,48 @@
 """SimPoint (BBV) vs two-phase RFV sampling, head to head.
 
-Reproduces the paper's central comparison on one command through the
-batched experiment engine: for each scheme, select 20 regions, project
-CPI for all 7 microarchitecture configurations in ONE vmapped dispatch,
-and print the error against the full-census ground truth.
+Reproduces the paper's central comparison through the app-sharded sweep
+engine: for each scheme, ONE ``run_sweep`` selects 20 regions per app and
+projects CPI for all 7 microarchitecture configurations in a single
+batched dispatch (sharded over an ``("app",)`` mesh when more than one
+device is available). No host-side per-app or per-config loops — the app
+argument may be one application or ``all`` for the full 10-app matrix.
 
-    PYTHONPATH=src python examples/compare_simpoint.py [app]
+    PYTHONPATH=src python examples/compare_simpoint.py [app|all]
 """
 
 import sys
 
-import numpy as np
-
-from repro.experiments import ExperimentEngine, scheme_selection
-from repro.simcpu import CONFIGS
+from repro.experiments import ExperimentEngine, SweepSpec, run_sweep
+from repro.simcpu import APP_NAMES, CONFIGS
 
 
 def main() -> None:
-    app = sys.argv[1] if len(sys.argv) > 1 else "557.xz_r"
-    engine = ExperimentEngine()
-    exp = engine.app(app)
+    arg = sys.argv[1] if len(sys.argv) > 1 else "557.xz_r"
+    apps = tuple(APP_NAMES) if arg == "all" else (arg,)
+    engine = ExperimentEngine.auto()
+    if engine.mesh is not None:
+        print(f"# app axis sharded over {engine.mesh.devices.size} devices")
 
-    ests = {}
-    for scheme in ("bbv", "rfv"):
-        sel, w = scheme_selection(exp, scheme, "centroid")
-        # per-config weighted estimates from ONE batched dispatch over all
-        # 7 configs, served through the region x config memo table
-        ests[scheme] = exp.weighted_cpi_all(sel, w)
+    # two batched sweeps: every app x config x scheme estimate, served
+    # through the shared region x config memo bank
+    tables = {scheme: run_sweep(engine, SweepSpec(
+        apps=apps, scheme=scheme, policy="centroid"))
+        for scheme in ("bbv", "rfv")}
 
-    print(f"{app}: per-config CPI projection error (20 regions each)")
-    print(f"{'config':8s} {'truth':>7s} {'SimPoint/BBV':>14s} "
-          f"{'two-phase/RFV':>14s}")
-    for i in range(len(CONFIGS)):
-        eb = 100 * abs(ests["bbv"][i] - exp.truth[i]) / exp.truth[i]
-        er = 100 * abs(ests["rfv"][i] - exp.truth[i]) / exp.truth[i]
-        print(f"config{i:2d} {exp.truth[i]:7.3f} "
-              f"{ests['bbv'][i]:7.3f} ({eb:4.1f}%) "
-              f"{ests['rfv'][i]:7.3f} ({er:4.1f}%)")
-    print(f"simulation cost: {exp.sim.ledger.regions_simulated} region "
-          f"simulations ({exp.sim.hits} cache hits)")
+    for app in apps:
+        exp = engine.app(app)
+        print(f"{app}: per-config CPI projection error (20 regions each)")
+        print(f"{'config':8s} {'truth':>7s} {'SimPoint/BBV':>14s} "
+              f"{'two-phase/RFV':>14s}")
+        rows = {s: tables[s].filter(app=app) for s in tables}
+        for i in range(len(CONFIGS)):
+            rb = rows["bbv"].filter(config_index=i).rows[0]
+            rr = rows["rfv"].filter(config_index=i).rows[0]
+            print(f"config{i:2d} {rb.truth:7.3f} "
+                  f"{rb.estimate:7.3f} ({rb.err_pct:4.1f}%) "
+                  f"{rr.estimate:7.3f} ({rr.err_pct:4.1f}%)")
+        print(f"simulation cost: {exp.sim.ledger.regions_simulated} region "
+              f"simulations ({exp.sim.hits} cache hits)")
 
 
 if __name__ == "__main__":

@@ -3,10 +3,18 @@
 # experiment engine. benchmarks/run.py exits non-zero on any FAILing
 # claim-validation row or bench error, so this script's exit code is the
 # CI verdict.
+#
+# CI_FORCE_DEVICES=N forces N XLA host devices BEFORE jax initializes so
+# the app-sharded engine paths (shard_map over the ("app",) mesh, memo
+# merges, sharded-vs-single equivalence tests) are exercised on every push.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ -n "${CI_FORCE_DEVICES:-}" ]]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=${CI_FORCE_DEVICES} ${XLA_FLAGS:-}"
+fi
 
 # dev extras (hypothesis property tests) are best-effort: the suite
 # degrades gracefully without them

@@ -1,11 +1,12 @@
 """Clustering for stratification: k-means, random projection, standardize."""
 
-from .kmeans import (KMeansResult, best_of, kmeans, kmeans_batch,
-                     kmeans_multi_seed)
+from .kmeans import (KMeansBank, KMeansResult, best_of, kmeans, kmeans_bank,
+                     kmeans_batch, kmeans_multi_seed)
 from .random_projection import projection_matrix, random_project
 from .standardize import Standardizer
 
 __all__ = [
-    "kmeans", "kmeans_batch", "kmeans_multi_seed", "best_of", "KMeansResult",
+    "kmeans", "kmeans_batch", "kmeans_bank", "kmeans_multi_seed", "best_of",
+    "KMeansResult", "KMeansBank",
     "random_project", "projection_matrix", "Standardizer",
 ]

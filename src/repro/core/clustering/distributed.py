@@ -22,12 +22,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .kmeans import _assign_jnp
 
-# jax >= 0.5 promotes shard_map to the top-level namespace; 0.4.x only has
-# the experimental home. Support both.
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-else:
-    from jax.experimental.shard_map import shard_map as _shard_map
+# version-compat shard_map shim shared with the app-axis sharding helpers
+from ...distributed.appaxis import shard_map as _shard_map
 
 
 def _local_stats(x, centroids, k):

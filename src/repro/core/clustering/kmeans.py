@@ -56,24 +56,31 @@ _ASSIGN = {"jnp": _assign_jnp, "pallas": _assign_pallas}
 
 
 def _update_centroids(x: jax.Array, labels: jax.Array, k: int,
-                      old: jax.Array) -> jax.Array:
-    """Mean of assigned points; empty clusters keep their old centroid."""
-    sums = jax.ops.segment_sum(x, labels, num_segments=k)
-    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype), labels,
-                                 num_segments=k)
+                      old: jax.Array, w=None) -> jax.Array:
+    """(Weighted) mean of assigned points; empty clusters keep their old
+    centroid. ``w=None`` is the exact historic unweighted path."""
+    xw = x if w is None else x * w[:, None]
+    ones = jnp.ones((x.shape[0],), x.dtype) if w is None else w
+    sums = jax.ops.segment_sum(xw, labels, num_segments=k)
+    counts = jax.ops.segment_sum(ones, labels, num_segments=k)
     safe = jnp.maximum(counts, 1.0)
     means = sums / safe[:, None]
     return jnp.where((counts > 0)[:, None], means, old)
 
 
-def _kmeanspp_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
-    """kmeans++ seeding (jit-friendly, O(k) passes)."""
+def _kmeanspp_init(key: jax.Array, x: jax.Array, k: int, w=None) -> jax.Array:
+    """kmeans++ seeding (jit-friendly, O(k) passes).
+
+    With point weights, selection probabilities are scaled by ``w`` so
+    zero-weight (padded) rows are never chosen as seeds.
+    """
     n = x.shape[0]
 
     def body(carry, i):
         key, centroids, min_d2 = carry
         key, sub = jax.random.split(key)
-        probs = min_d2 / jnp.maximum(min_d2.sum(), 1e-30)
+        scaled = min_d2 if w is None else min_d2 * w
+        probs = scaled / jnp.maximum(scaled.sum(), 1e-30)
         idx = jax.random.choice(sub, n, p=probs)
         c_new = x[idx]
         centroids = centroids.at[i].set(c_new)
@@ -81,7 +88,11 @@ def _kmeanspp_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
         return (key, centroids, jnp.minimum(min_d2, d2_new)), None
 
     key, sub = jax.random.split(key)
-    first = x[jax.random.randint(sub, (), 0, n)]
+    if w is None:
+        first = x[jax.random.randint(sub, (), 0, n)]
+    else:
+        first = x[jax.random.choice(sub, n,
+                                    p=w / jnp.maximum(w.sum(), 1e-30))]
     centroids = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(first)
     min_d2 = jnp.sum((x - first[None, :]) ** 2, axis=1)
     (key, centroids, _), _ = jax.lax.scan(
@@ -91,9 +102,9 @@ def _kmeanspp_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("k", "max_iters", "backend", "tol"))
 def _kmeans_fit(key: jax.Array, x: jax.Array, k: int, max_iters: int,
-                backend: str, tol: float):
+                backend: str, tol: float, w=None):
     assign = _ASSIGN[backend]
-    init = _kmeanspp_init(key, x, k)
+    init = _kmeanspp_init(key, x, k, w)
 
     def cond(state):
         _, _, it, shift = state
@@ -102,7 +113,7 @@ def _kmeans_fit(key: jax.Array, x: jax.Array, k: int, max_iters: int,
     def body(state):
         centroids, _, it, _ = state
         labels, _ = assign(x, centroids)
-        new_c = _update_centroids(x, labels, k, centroids)
+        new_c = _update_centroids(x, labels, k, centroids, w)
         shift = jnp.max(jnp.sum((new_c - centroids) ** 2, axis=1))
         return new_c, labels, it + 1, shift
 
@@ -110,7 +121,8 @@ def _kmeans_fit(key: jax.Array, x: jax.Array, k: int, max_iters: int,
     state = (init, labels0, jnp.asarray(0), jnp.asarray(jnp.inf, x.dtype))
     centroids, labels, iters, _ = jax.lax.while_loop(cond, body, state)
     labels, min_d2 = assign(x, centroids)
-    return centroids, labels, min_d2.sum(), iters
+    inertia = min_d2.sum() if w is None else (min_d2 * w).sum()
+    return centroids, labels, inertia, iters
 
 
 @functools.partial(jax.jit,
@@ -233,3 +245,77 @@ def kmeans_multi_seed(
 
 def best_of(results: list[KMeansResult]) -> KMeansResult:
     return min(results, key=lambda r: r.inertia)
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansBank:
+    """Stacked per-app fits: one lane per dataset of an (A, n, d) stack."""
+
+    centroids: np.ndarray   # (A, k, d)
+    labels: np.ndarray      # (A, n)
+    inertia: np.ndarray     # (A,)
+    iterations: np.ndarray  # (A,)
+
+    def __len__(self) -> int:
+        return int(self.labels.shape[0])
+
+    def lane(self, a: int, n_valid: Optional[int] = None) -> KMeansResult:
+        end = self.labels.shape[1] if n_valid is None else int(n_valid)
+        return KMeansResult(centroids=self.centroids[a],
+                            labels=self.labels[a, :end],
+                            inertia=float(self.inertia[a]),
+                            iterations=int(self.iterations[a]))
+
+
+def kmeans_bank(
+    features,
+    k: int,
+    *,
+    weights=None,
+    key: Optional[jax.Array] = None,
+    seed: int = 0,
+    max_iters: int = 100,
+    backend: str = "jnp",
+    tol: float = 1e-8,
+    mesh=None,
+) -> KMeansBank:
+    """One k-means fit per DATASET lane of an ``(A, n, d)`` stack.
+
+    This is the app-axis companion of ``kmeans_batch`` (which vmaps over
+    seeds for one dataset): every lane fits its own point set with its own
+    point ``weights`` (weight 0 = padded row, never seeds a centroid and
+    never moves one — how ragged per-app populations share one stack).
+    All lanes share the same PRNG ``key``/``seed`` so lane ``a`` matches a
+    single-dataset weighted fit with that key. With ``mesh`` (a 1-D
+    ``("app",)`` mesh) lanes run device-parallel; per-lane results are
+    identical to the single-device vmap because lanes never interact
+    (under vmap the Lloyd ``while_loop`` freezes converged lanes).
+    """
+    x = jnp.asarray(features, jnp.float32)
+    if x.ndim != 3:
+        raise ValueError(f"expected (A, n, d), got {x.shape}")
+    if k < 1 or k > x.shape[1]:
+        raise ValueError(f"k={k} invalid for n={x.shape[1]}")
+    w = jnp.ones(x.shape[:2], x.dtype) if weights is None else \
+        jnp.asarray(weights, jnp.float32)
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+
+    fit = _bank_fit_fn(k, max_iters, backend, tol)
+    if mesh is None:
+        out = fit(key, x, w)
+    else:
+        from ...distributed.appaxis import app_sharded_cached
+        out = app_sharded_cached(fit, mesh, (0,))(key, x, w)
+    centroids, labels, inertia, iters = (np.asarray(o) for o in out)
+    return KMeansBank(centroids=centroids, labels=labels, inertia=inertia,
+                      iterations=iters)
+
+
+@functools.lru_cache(maxsize=None)
+def _bank_fit_fn(k: int, max_iters: int, backend: str, tol: float):
+    """Stable (cacheable) vmapped bank fit: one compile per parameter set,
+    shared by the single-device and shard_map paths."""
+    def fit(key, xa, wa):
+        return _kmeans_fit(key, xa, k, max_iters, backend, tol, wa)
+    return jax.vmap(fit, in_axes=(None, 0, 0))

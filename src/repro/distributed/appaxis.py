@@ -1,0 +1,87 @@
+"""App-axis data parallelism for batched-over-app array programs.
+
+The experiment engine treats "application" as a leading batch axis: every
+heavy dispatch (census evaluation, memo fills, k-means fits, Monte-Carlo
+trials) is a vmapped program over ``(A, ...)`` stacks. This module turns
+those same programs into device-parallel ones by ``shard_map``-ping the app
+axis over a 1-D ``("app",)`` mesh (see ``repro.launch.mesh.make_app_mesh``).
+
+Per-app results are bit-identical to the single-device vmap: lanes never
+communicate, so sharding only changes *where* a lane runs. The app axis is
+padded up to the device count by edge-replication (recomputing a real app
+is always numerically safe; padded rows are dropped on return).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+# jax >= 0.5 promotes shard_map to the top-level namespace; 0.4.x only has
+# the experimental home. Support both (shared by repro.core.clustering too).
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def app_axis_name(mesh: Mesh) -> str:
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"app sharding expects a 1-D mesh, got axes {mesh.axis_names}")
+    return mesh.axis_names[0]
+
+
+def pad_app_axis(arr, multiple: int):
+    """Pad the leading axis to a multiple by edge-replicating the last row."""
+    a = arr.shape[0]
+    pad = (-a) % multiple
+    if pad == 0:
+        return arr
+    reps = np.concatenate([np.arange(a), np.full(pad, a - 1)])
+    return arr[reps] if isinstance(arr, np.ndarray) else \
+        jax.numpy.take(arr, jax.numpy.asarray(reps), axis=0)
+
+
+def make_app_sharded(fn: Callable, mesh: Mesh,
+                     replicated: Sequence[int] = ()) -> Callable:
+    """Wrap a batched-over-app ``fn`` so its app axis runs device-parallel.
+
+    ``fn`` takes arrays whose leading axis is the app axis (except argument
+    positions in ``replicated``, which are broadcast — e.g. a config
+    matrix) and returns a pytree of arrays sharded the same way. The
+    wrapper pads the app axis to the device count, dispatches one
+    ``shard_map``-ped program, and trims the padding.
+    """
+    axis = app_axis_name(mesh)
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    rep = frozenset(replicated)
+
+    @functools.lru_cache(maxsize=8)
+    def build(n_args: int):
+        in_specs = tuple(P() if i in rep else P(axis) for i in range(n_args))
+        # check_rep=False: jax 0.4.x has no replication rule for while_loop
+        # (the k-means Lloyd loop); lanes are independent so it is vacuous
+        return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=P(axis), check_rep=False))
+
+    def call(*args: Any):
+        a_size = next(np.shape(a)[0] for i, a in enumerate(args)
+                      if i not in rep)
+        padded = tuple(a if i in rep else pad_app_axis(a, n_dev)
+                       for i, a in enumerate(args))
+        out = build(len(args))(*padded)
+        return jax.tree.map(lambda o: o[:a_size], out)
+
+    return call
+
+
+@functools.lru_cache(maxsize=None)
+def app_sharded_cached(fn: Callable, mesh: Mesh,
+                       replicated: tuple = ()) -> Callable:
+    """Memoized ``make_app_sharded`` for module-level fns (stable hash)."""
+    return make_app_sharded(fn, mesh, replicated)

@@ -1,17 +1,24 @@
-"""Batched experiment engine (vmapped configs + seeds, memoized simulation).
+"""App-sharded batched experiment engine (stacked populations, vmapped
+configs/seeds/trials, memoized simulation).
 
-``ExperimentEngine`` builds per-app state once (census truth via one
-vmapped all-config dispatch, phase-1 sample, BBV/RFV/DG stratifications)
-on top of ``CachedSimulator``; ``run_sweep(engine, SweepSpec(...))``
-drives apps × configs × schemes through the batched paths.
+``ExperimentEngine.build(names)`` constructs per-app state via
+batched-over-app programs (census truth, phase-1 sample, BBV/RFV/DG
+stratifications) on top of one shared ``MemoBank``;
+``run_sweep(engine, SweepSpec(...))`` and
+``run_trials(engine, TrialSpec(...))`` drive apps × configs × schemes ×
+Monte-Carlo trials through the batched (optionally app-sharded) paths.
 """
 
 from .engine import (NUM_STRATA, PHASE1_SEED, AppExperiment,
-                     ExperimentEngine, scheme_selection)
+                     ExperimentEngine, SweepStack, scheme_selection,
+                     scheme_selection_bank)
+from .montecarlo import TrialResult, TrialSpec, run_trials, trial_uniforms
 from .sweep import ResultsTable, SweepRow, SweepSpec, run_sweep
 
 __all__ = [
-    "ExperimentEngine", "AppExperiment", "scheme_selection",
+    "ExperimentEngine", "AppExperiment", "SweepStack",
+    "scheme_selection", "scheme_selection_bank",
     "SweepSpec", "SweepRow", "ResultsTable", "run_sweep",
+    "TrialSpec", "TrialResult", "run_trials", "trial_uniforms",
     "NUM_STRATA", "PHASE1_SEED",
 ]

@@ -1,41 +1,55 @@
-"""Batched experiment engine over the synthetic simulation substrate.
+"""App-sharded batched experiment engine over the simulation substrate.
 
-One ``ExperimentEngine`` owns, per application, an ``AppExperiment``: a
-``CachedSimulator`` (region × config memo, miss-only cost accounting), the
-census ground truth for every config (computed as ONE vmapped dispatch over
-the stacked config matrix), and the paper's three stratifications (BBV,
-RFV, Dalenius-Gurney). Sweeps over (app × config × scheme) then run through
-``AppExperiment.cpi_all`` — one batched XLA program per region set instead
-of C sequential dispatches — and through the memo table, so a region is
-charged once per config no matter how many figures touch it.
+The engine treats the application axis as a data-parallel array dimension:
+``build(names)`` stacks every requested app's population into one
+``(A, N, F)`` device array (``PopulationBank``) and runs each build phase
+as ONE batched-over-app program —
 
-This used to live in ``benchmarks/simcpu_common.py`` as nested Python
-loops; ``benchmarks/simcpu_common`` now re-exports from here.
+* census ground truth: ``cpi_bank`` vmapped over (app, config, region);
+* BBV projection + k-means: ``random_project``/``kmeans_bank`` vmapped
+  over the app axis with zero-weight padding rows;
+* phase-1 SRS measurement: one ``rfv_bank`` dispatch for all apps'
+  phase-1 samples, charged through the shared ``MemoBank``;
+* RFV standardization + k-means: masked batched z-scoring + weighted
+  ``kmeans_bank``.
+
+With a 1-D ``("app",)`` mesh (``repro.launch.mesh.make_app_mesh``) each of
+those programs is ``shard_map``-ped so apps run device-parallel; the
+single-device path is the default and produces identical results (lanes
+never communicate). Dalenius-Gurney stratification stays a host-side
+scalar algorithm per app (it is an iterative boundary search on a few
+thousand values, not a device program).
+
+Per-app state is exposed exactly as before through ``AppExperiment`` — a
+view slicing the stacked arrays back to one app — so figure code keeps
+reading ``exp.bbv_labels`` etc. while sweeps and Monte-Carlo trials use
+the stacked arrays directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import Optional, Sequence
 
 import jax
 import numpy as np
 
-from ..core.clustering import (Standardizer, kmeans, kmeans_batch,
-                               random_project)
-from ..core.sampling import (dalenius_gurney_strata, draw_srs,
-                             select_centroid, select_mean, select_random)
-from ..simcpu import (APP_NAMES, CONFIGS, CachedSimulator, cpi_batch,
-                      get_bbvs, make_cached_simulator)
+from ..core.clustering import kmeans_bank, kmeans_batch, random_project
+from ..core.sampling import dalenius_gurney_strata, draw_srs
+from ..simcpu import (APP_NAMES, CONFIGS, CachedSimulator, MemoBank,
+                      config_matrix, cpi_bank, get_population_bank,
+                      make_simulator, rfv_bank, stack_ragged)
 
 NUM_STRATA = 20
 PHASE1_SEED = 42
+SCHEMES_STRATIFIED = ("bbv", "rfv", "dg")
 
 
 @dataclasses.dataclass
 class AppExperiment:
-    """Per-application state shared by every figure/sweep."""
+    """Per-application view shared by every figure/sweep."""
 
     name: str
     sim: CachedSimulator
@@ -84,11 +98,24 @@ class AppExperiment:
         ``selected``: per-stratum population index arrays (any count per
         stratum). Strata with no selected units renormalize the estimate
         by the covered weight — with the same warn/raise contract as
-        ``weighted_point_estimate`` so the bias can't pass silently.
+        ``weighted_point_estimate`` so the bias can't pass silently. When
+        EVERY stratum is empty there is nothing to renormalize to: that
+        raises under ``strict=True`` and otherwise warns and returns NaN
+        estimates.
         """
+        n_cfg = len(self.configs) if config_indices is None \
+            else len(tuple(config_indices))
         weights = np.asarray(weights, np.float64)
         sel = [np.atleast_1d(np.asarray(s)) for s in selected]
-        flat = np.concatenate([s for s in sel if s.size])
+        nonempty = [s for s in sel if s.size]
+        if not nonempty:
+            msg = ("every stratum selection is empty; no units to "
+                   "estimate from")
+            if strict:
+                raise ValueError(msg)
+            warnings.warn(msg, UserWarning, stacklevel=2)
+            return np.full(n_cfg, np.nan)
+        flat = np.concatenate(nonempty)
         seg = np.concatenate([np.full(s.size, h, np.int64)
                               for h, s in enumerate(sel) if s.size])
         counts = np.bincount(seg, minlength=len(sel))
@@ -110,65 +137,199 @@ class AppExperiment:
         return self.census_mat[cfg_i]
 
 
+@dataclasses.dataclass(frozen=True)
+class SweepStack:
+    """Stacked per-app arrays backing the engine's batched dispatch paths."""
+
+    names: tuple[str, ...]
+    rows: np.ndarray            # (A,) MemoBank rows
+    n_regions: np.ndarray       # (A,)
+    feats: np.ndarray           # (A, N_max, F) float32 (zero-padded)
+    region_mask: np.ndarray     # (A, N_max) bool
+    idx1: np.ndarray            # (A, n1_max) phase-1 indices (padded)
+    idx1_valid: np.ndarray      # (A, n1_max) bool
+
+    @property
+    def num_apps(self) -> int:
+        return len(self.names)
+
+    def gather_feats(self, idx: np.ndarray) -> np.ndarray:
+        """(A, K, F) features at per-app region indices (padding-safe)."""
+        return self.feats[np.arange(len(self.names))[:, None], idx]
+
+
+def _offset_bincount(labels: np.ndarray, valid: np.ndarray,
+                     num_strata: int, weights=None) -> np.ndarray:
+    """(A, L) per-app stratum counts — or weighted sums — over valid
+    entries, no host loop."""
+    a_n = labels.shape[0]
+    off = labels + num_strata * np.arange(a_n)[:, None]
+    return np.bincount(
+        off[valid].ravel(),
+        weights=None if weights is None else weights[valid].ravel(),
+        minlength=a_n * num_strata).reshape(a_n, num_strata)
+
+
+def stratum_tables(labels: np.ndarray, valid: np.ndarray, num_strata: int
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-stratum gather tables for an (A, n) label stack.
+
+    Returns ``(order, offsets, counts)``: stratum ``h`` of app ``a`` owns
+    positions ``order[a, offsets[a, h] : offsets[a, h] + counts[a, h]]``,
+    in index order (invalid entries sort last). Shared by vectorized
+    selection and the Monte-Carlo trial engine so draw indexing can never
+    drift between the two. NOTE: for trailing empty strata ``offsets``
+    equals the row width — gathers must clamp (empty strata are masked
+    out of every consumer anyway)."""
+    counts = _offset_bincount(labels, valid, num_strata)
+    order = np.argsort(np.where(valid, labels, num_strata), axis=1,
+                       kind="stable")
+    offsets = np.cumsum(counts, axis=1) - counts
+    return order, offsets, counts
+
+
 class ExperimentEngine:
-    """Builds and memoizes ``AppExperiment`` state; runs batched sweeps."""
+    """Builds ``AppExperiment`` state batched over apps; runs batched sweeps.
+
+    ``mesh``: optional 1-D ``("app",)`` mesh — every batched build/sweep
+    dispatch is then ``shard_map``-ped over the app axis. ``None`` (the
+    default) runs the identical programs on one device.
+    """
+
+    @classmethod
+    def auto(cls, **kwargs) -> "ExperimentEngine":
+        """Engine with an ``("app",)`` mesh when >1 device is present —
+        THE way examples/benchmarks pick up ``--devices N`` /
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+        if "mesh" not in kwargs:
+            mesh = None
+            if len(jax.devices()) > 1:
+                from ..launch.mesh import make_app_mesh
+                mesh = make_app_mesh()
+            kwargs["mesh"] = mesh
+        return cls(**kwargs)
 
     def __init__(self, *, configs: Sequence = CONFIGS,
                  num_strata: int = NUM_STRATA,
-                 phase1_seed: int = PHASE1_SEED):
+                 phase1_seed: int = PHASE1_SEED,
+                 mesh=None):
         self.configs = tuple(configs)
         self.num_strata = num_strata
         self.phase1_seed = phase1_seed
+        self.mesh = mesh
+        self.memo = MemoBank()
         self._apps: dict[tuple[str, int], AppExperiment] = {}
+        self._stacks: dict[tuple[tuple[str, ...], int], SweepStack] = {}
 
     def app(self, name: str, kmeans_seed: int = 0) -> AppExperiment:
-        key = (name, kmeans_seed)
-        if key not in self._apps:
-            self._apps[key] = self._build(name, kmeans_seed)
-        return self._apps[key]
+        return self.build((name,), kmeans_seed)[0]
 
     def apps(self, names: Optional[Sequence[str]] = None
              ) -> list[AppExperiment]:
-        return [self.app(n) for n in (names or APP_NAMES)]
+        return self.build(tuple(names or APP_NAMES))
 
-    def _build(self, name: str, kmeans_seed: int) -> AppExperiment:
+    def build(self, names: Sequence[str],
+              kmeans_seed: int = 0) -> list[AppExperiment]:
+        """Batched build: every not-yet-built app in ``names`` is
+        constructed in ONE set of stacked-over-app programs."""
+        names = tuple(names)
+        todo = tuple(dict.fromkeys(
+            n for n in names if (n, kmeans_seed) not in self._apps))
+        if todo:
+            self._build_stacked(todo, kmeans_seed)
+        return [self._apps[(n, kmeans_seed)] for n in names]
+
+    def stack(self, names: Sequence[str],
+              kmeans_seed: int = 0) -> SweepStack:
+        """Stacked view over (already built) apps for batched dispatches."""
+        names = tuple(names)
+        key = (names, kmeans_seed)
+        if key not in self._stacks:
+            exps = self.build(names, kmeans_seed)
+            bank = get_population_bank(names)
+            idx1, idx1_valid = stack_ragged([e.idx1 for e in exps])
+            self._stacks[key] = SweepStack(
+                names=names,
+                rows=np.asarray([e.sim.row for e in exps], np.int64),
+                n_regions=bank.n_regions, feats=bank.features,
+                region_mask=bank.mask, idx1=idx1, idx1_valid=idx1_valid)
+        return self._stacks[key]
+
+    # ------------------------------------------------------------------ build
+    def _build_stacked(self, names: tuple[str, ...], kmeans_seed: int) -> None:
+        from ..simcpu import get_bbvs
+
         L = self.num_strata
-        sim = make_cached_simulator(name)
-        pop = sim.pop
-        N = pop.n_regions
-        rng = np.random.default_rng(self.phase1_seed)
+        mesh = self.mesh
+        bank = get_population_bank(names)
+        a_n = bank.num_apps
+        ar = np.arange(a_n)
+
+        sims = []
+        for name, pop in zip(names, bank.pops):
+            base = make_simulator(name)
+            row = self.memo.add_app(name, pop.n_regions, base.ledger)
+            sims.append(CachedSimulator(base, bank=self.memo, row=row))
 
         # census ground truth for every config: one vmapped program
         # (analysis-only — free of charge, bypasses the charged memo)
-        census_mat = cpi_batch(pop.features, self.configs)
-        truth = census_mat.mean(axis=1, dtype=np.float64)
+        census = cpi_bank(bank.features, config_matrix(self.configs),
+                          mesh=mesh)                       # (A, C, N)
+        truth = np.where(bank.mask[:, None, :], census, 0.0).sum(
+            axis=2, dtype=np.float64) / bank.n_regions[:, None]
 
-        # SimPoint-style BBV stratification over the full population
-        bbv = get_bbvs(pop)
-        z = np.asarray(random_project(bbv, 15, key=jax.random.PRNGKey(0)))
-        km = kmeans(z, L, seed=kmeans_seed)
-        bbv_w = np.bincount(km.labels, minlength=L) / N
+        # SimPoint-style BBV stratification over the full populations
+        bbvs, _ = stack_ragged([get_bbvs(p) for p in bank.pops],
+                               dtype=np.float32)
+        z = np.asarray(_project_bank(bbvs, mesh=mesh))     # (A, N, 15)
+        bbv_fit = kmeans_bank(z, L, weights=bank.mask.astype(np.float32),
+                              seed=kmeans_seed, mesh=mesh)
+        bbv_counts = _offset_bincount(bbv_fit.labels, bank.mask, L)
+        bbv_w = bbv_counts / bank.n_regions[:, None]
 
-        # phase 1: SRS at the paper's Table II size, RFVs on config 0
-        idx1 = draw_srs(rng, N, pop.spec.phase1_n)
-        cpi0_1, rfv = sim.simulate_rfv(idx1, self.configs[0])
-        _, zr = Standardizer.fit_transform(rfv)
-        zr = np.asarray(zr)
-        km2 = kmeans(zr, L, seed=kmeans_seed)
-        rfv_w = np.bincount(km2.labels, minlength=L) / idx1.size
+        # phase 1: SRS at the paper's Table II sizes, measured on config 0
+        # as ONE stacked dispatch, charged through the shared memo bank
+        idx1_list = [draw_srs(np.random.default_rng(self.phase1_seed),
+                              pop.n_regions, pop.spec.phase1_n)
+                     for pop in bank.pops]
+        idx1, idx1_valid = stack_ragged(idx1_list)
+        cpi0, rfv = rfv_bank(bank.features[ar[:, None], idx1],
+                             self.configs[0], mesh=mesh)
+        rows = np.asarray([s.row for s in sims], np.int64)
+        self.memo.fill(rows, idx1, idx1_valid, (self.configs[0],),
+                       values=cpi0[:, None, :])
 
-        dg = dalenius_gurney_strata(cpi0_1, L)
-        dg_w = np.bincount(dg, minlength=L) / idx1.size
+        # RFV stratification: masked batched z-scoring + weighted k-means
+        n1 = idx1_valid.sum(axis=1)                        # (A,)
+        v3 = idx1_valid[:, :, None]
+        mean = np.where(v3, rfv, 0.0).sum(1) / n1[:, None]
+        var = np.where(v3, (rfv - mean[:, None, :]) ** 2, 0.0).sum(1) \
+            / n1[:, None]
+        scale = np.sqrt(var)
+        scale = np.where(scale > 1e-12, scale, 1.0)
+        zr = np.where(v3, (rfv - mean[:, None, :]) / scale[:, None, :], 0.0)
+        rfv_fit = kmeans_bank(zr, L, weights=idx1_valid.astype(np.float32),
+                              seed=kmeans_seed, mesh=mesh)
+        rfv_w = _offset_bincount(rfv_fit.labels, idx1_valid, L) / n1[:, None]
 
-        return AppExperiment(
-            name=name, sim=sim, configs=self.configs,
-            truth=truth, census_mat=census_mat,
-            bbv_labels=km.labels, bbv_weights=bbv_w, bbv_feats=z,
-            bbv_centroids=km.centroids,
-            idx1=idx1, cpi0_1=np.asarray(cpi0_1), rfv_z=zr,
-            rfv_labels=km2.labels, rfv_weights=rfv_w,
-            rfv_centroids=km2.centroids,
-            dg_labels=dg, dg_weights=dg_w, num_strata=L)
+        # Dalenius-Gurney on baseline CPI (host-side scalar refinement)
+        dg_list = [dalenius_gurney_strata(cpi0[a, :n1[a]], L)
+                   for a in range(a_n)]
+        dg, _ = stack_ragged(dg_list)
+        dg_w = _offset_bincount(dg, idx1_valid, L) / n1[:, None]
+
+        for a, (name, sim, pop) in enumerate(zip(names, sims, bank.pops)):
+            n, n1_a = pop.n_regions, int(n1[a])
+            self._apps[(name, kmeans_seed)] = AppExperiment(
+                name=name, sim=sim, configs=self.configs,
+                truth=truth[a], census_mat=census[a, :, :n],
+                bbv_labels=bbv_fit.labels[a, :n], bbv_weights=bbv_w[a],
+                bbv_feats=z[a, :n], bbv_centroids=bbv_fit.centroids[a],
+                idx1=idx1_list[a], cpi0_1=cpi0[a, :n1_a],
+                rfv_z=zr[a, :n1_a],
+                rfv_labels=rfv_fit.labels[a, :n1_a], rfv_weights=rfv_w[a],
+                rfv_centroids=rfv_fit.centroids[a],
+                dg_labels=dg_list[a], dg_weights=dg_w[a], num_strata=L)
 
     # multi-seed stratification (paper Figs 7-8): one vmapped computation
     def rfv_stratifications(self, name: str, seeds: Sequence[int]):
@@ -177,33 +338,107 @@ class ExperimentEngine:
         return kmeans_batch(exp.rfv_z, self.num_strata, seeds=list(seeds))
 
 
-def scheme_selection(exp: AppExperiment, scheme: str, policy: str,
-                     seed: int = 0) -> tuple[list[np.ndarray], np.ndarray]:
-    """Population indices per stratum + weights for a scheme/policy."""
-    L = exp.num_strata
+@functools.lru_cache(maxsize=None)
+def _project_bank_fn(mesh):
+    key = jax.random.PRNGKey(0)
+    fn = jax.vmap(lambda b: random_project(b, 15, key=key))
+    if mesh is None:
+        return jax.jit(fn)
+    from ..distributed.appaxis import make_app_sharded
+    return make_app_sharded(fn, mesh)
+
+
+def _project_bank(bbvs: np.ndarray, *, mesh=None):
+    """(A, N, 256) BBVs -> (A, N, 15) projections, one batched dispatch.
+
+    Every app uses the same JL projection matrix (same key), matching the
+    historic per-app ``random_project(bbv, 15, key=PRNGKey(0))`` exactly.
+    """
+    return _project_bank_fn(mesh)(bbvs)
+
+
+# --------------------------------------------------------------- selection
+def scheme_selection_bank(
+    exps: Sequence[AppExperiment], scheme: str, policy: str, seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized one-unit-per-stratum selection for a stack of apps.
+
+    Returns ``(picks, valid, weights)``: (A, L) population indices, an
+    (A, L) validity mask (False where the stratum is empty — empty strata
+    are masked out of selection entirely, they can't contribute NaN
+    centroids or distances), and the (A, L) stratum weights.
+    """
+    L = exps[0].num_strata
     if scheme == "bbv":
-        labels, weights = exp.bbv_labels, exp.bbv_weights
-        feats, cents = exp.bbv_feats, exp.bbv_centroids
-        pool = np.arange(labels.shape[0])
-        baseline = exp.census(0)
-    else:
-        labels = exp.rfv_labels if scheme == "rfv" else exp.dg_labels
-        weights = exp.rfv_weights if scheme == "rfv" else exp.dg_weights
-        feats = exp.rfv_z if scheme == "rfv" else exp.cpi0_1[:, None]
-        pool = exp.idx1
-        baseline = exp.cpi0_1
-        if scheme == "dg":
-            cents = np.array([[baseline[labels == h].mean()]
-                              if (labels == h).any() else [np.nan]
-                              for h in range(L)])
+        labels, lv = stack_ragged([e.bbv_labels for e in exps])
+        feats, _ = stack_ragged([e.bbv_feats for e in exps])
+        cents = np.stack([e.bbv_centroids for e in exps])
+        baseline, _ = stack_ragged([e.census(0) for e in exps])
+        pool = None
+        weights = np.stack([e.bbv_weights for e in exps])
+    elif scheme in ("rfv", "dg"):
+        rfv = scheme == "rfv"
+        labels, lv = stack_ragged(
+            [e.rfv_labels if rfv else e.dg_labels for e in exps])
+        baseline, _ = stack_ragged([e.cpi0_1 for e in exps])
+        pool, _ = stack_ragged([e.idx1 for e in exps])
+        weights = np.stack(
+            [e.rfv_weights if rfv else e.dg_weights for e in exps])
+        if rfv:
+            feats, _ = stack_ragged([e.rfv_z for e in exps])
+            cents = np.stack([e.rfv_centroids for e in exps])
         else:
-            cents = exp.rfv_centroids
-    if policy == "random":
-        local = select_random(labels, L, np.random.default_rng(seed))
-    elif policy == "centroid":
-        local = select_centroid(labels, feats, cents)
+            feats = baseline[:, :, None]
+            # per-stratum mean baseline CPI; EMPTY strata get a zero
+            # centroid but are masked out of selection below, so no NaN
+            # ever reaches a distance computation
+            counts = _offset_bincount(labels, lv, L)
+            sums = _offset_bincount(labels, lv, L, weights=baseline)
+            cents = (sums / np.maximum(counts, 1))[:, :, None]
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    counts = _offset_bincount(labels, lv, L)
+    member = (labels[:, :, None] == np.arange(L)[None, None, :]) \
+        & lv[:, :, None]                                   # (A, n, L)
+
+    if policy == "centroid":
+        x2 = (feats ** 2).sum(axis=2)                       # (A, n)
+        c2 = (cents ** 2).sum(axis=2)                       # (A, L)
+        d2 = x2[:, :, None] - 2.0 * np.einsum(
+            "and,ald->anl", feats, cents) + c2[:, None, :]
+        local = np.where(member, d2, np.inf).argmin(axis=1)
     elif policy == "mean":
-        local = select_mean(labels, baseline, num_strata=L)
+        sums = _offset_bincount(labels, lv, L, weights=baseline)
+        target = sums / np.maximum(counts, 1)
+        d = np.abs(baseline[:, :, None] - target[:, None, :])
+        local = np.where(member, d, np.inf).argmin(axis=1)
+    elif policy == "random":
+        rng = np.random.default_rng(seed)
+        u = rng.random(counts.shape)                        # (A, L)
+        order, offsets, _ = stratum_tables(labels, lv, L)
+        pos = offsets + np.minimum((u * counts).astype(np.int64),
+                                   np.maximum(counts - 1, 0))
+        # trailing empty strata put offsets at the row width: clamp (the
+        # pick is discarded by the validity mask below)
+        pos = np.minimum(pos, max(order.shape[1] - 1, 0))
+        local = np.take_along_axis(order, pos, axis=1)
     else:
         raise ValueError(policy)
-    return [pool[l] for l in local], weights
+
+    valid = counts > 0
+    picks = local if pool is None else np.take_along_axis(pool, local, axis=1)
+    return np.where(valid, picks, 0), valid, weights
+
+
+def scheme_selection(exp: AppExperiment, scheme: str, policy: str,
+                     seed: int = 0) -> tuple[list[np.ndarray], np.ndarray]:
+    """Population indices per stratum + weights for a scheme/policy.
+
+    Thin per-app wrapper over ``scheme_selection_bank`` so single-app
+    callers and the batched sweep driver share one code path.
+    """
+    picks, valid, weights = scheme_selection_bank([exp], scheme, policy, seed)
+    sel = [np.asarray([picks[0, h]], np.int64) if valid[0, h]
+           else np.empty(0, np.int64) for h in range(exp.num_strata)]
+    return sel, weights[0]

@@ -1,0 +1,180 @@
+"""Engine-backed Monte-Carlo trials (paper Fig 8) as vmapped trial axes.
+
+``bench_ci_empirical`` used to run 1000-trial numpy loops per app and per
+stratum; ``run_trials`` folds both into array axes: ONE program per scheme
+evaluates every (app, trial, stratum) draw — uniforms of shape
+``(A, T, L)`` (or ``(A, T, n)`` for the SRS scheme) gathered against
+per-app stratum tables. With an ``("app",)`` mesh the app axis runs
+device-parallel; the uniforms are drawn *outside* the sharded region from
+one PRNG key, so sharded and single-device runs use identical draws and
+produce identical estimates.
+
+Cost accounting matches the figure's semantics exactly: schemes drawing
+from census CPI (``random``, ``bbv``) are analysis-only and free; schemes
+drawing from the phase-1 sample (``rfv``, ``dg``) pull their value pool
+through the engine's charged ``MemoBank`` (paid once, like the historic
+``exp.cpi(cfg, exp.idx1)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..simcpu import APP_NAMES, stack_ragged
+from .engine import ExperimentEngine, stratum_tables
+
+# canonical scheme order: key derivation is position-based so a scheme's
+# draws are identical no matter which subset a TrialSpec requests
+TRIAL_SCHEMES = ("random", "bbv", "rfv", "dg")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialSpec:
+    """Monte-Carlo repetition axes for one study configuration."""
+
+    trials: int = 1000
+    units_per_trial: int = 20          # SRS draw size (scheme "random")
+    schemes: tuple[str, ...] = TRIAL_SCHEMES
+    config_index: int = 6              # study config (paper: Config 6)
+    seed: int = 7
+
+    def __post_init__(self):
+        unknown = set(self.schemes) - set(TRIAL_SCHEMES)
+        if unknown:
+            raise ValueError(f"unknown trial scheme(s) {sorted(unknown)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialResult:
+    apps: tuple[str, ...]
+    spec: TrialSpec
+    estimates: dict[str, np.ndarray]   # scheme -> (A, T) estimated mean CPI
+    errors: dict[str, np.ndarray]      # scheme -> (A, T) percent |error|
+
+    def p95(self, scheme: str) -> np.ndarray:
+        """(A,) 95th-percentile |error| per app (the Fig 8 statistic)."""
+        return np.percentile(self.errors[scheme], 95, axis=1)
+
+
+def trial_key(spec: TrialSpec, scheme: str) -> jax.Array:
+    """Per-scheme PRNG key; exposed so reference implementations (tests)
+    can reproduce the exact uniforms ``run_trials`` consumes."""
+    return jax.random.fold_in(jax.random.PRNGKey(spec.seed),
+                              TRIAL_SCHEMES.index(scheme))
+
+
+def trial_uniforms(spec: TrialSpec, scheme: str, num_apps: int,
+                   draws_per_trial: int) -> np.ndarray:
+    """The (A, T, D) uniform draws backing one scheme's trials."""
+    return np.asarray(jax.random.uniform(
+        trial_key(spec, scheme),
+        (num_apps, spec.trials, draws_per_trial), jnp.float32))
+
+
+def _srs_trials(u, pool, n_valid, truth):
+    """(A, T, n) uniforms x (A, N) value pool -> ((A, T) est, (A, T) err)."""
+    a, t, n = u.shape
+    idx = jnp.minimum((u * n_valid[:, None, None]).astype(jnp.int32),
+                      (n_valid - 1)[:, None, None].astype(jnp.int32))
+    vals = jnp.take_along_axis(
+        jnp.broadcast_to(pool[:, None, :], (a, t, pool.shape[1])), idx,
+        axis=2)
+    est = vals.mean(axis=2)
+    err = 100.0 * jnp.abs(est - truth[:, None]) / truth[:, None]
+    return est, err
+
+
+def _stratified_trials(u, sorted_vals, offsets, counts, weights, truth):
+    """One unit per non-empty stratum per trial, weighted sum (the Fig 8
+    estimator: empty strata contribute nothing, no renormalization)."""
+    a, t, l = u.shape
+    pick = offsets[:, None, :] + jnp.minimum(
+        (u * counts[:, None, :]).astype(jnp.int32),
+        jnp.maximum(counts - 1, 0)[:, None, :].astype(jnp.int32))
+    # trailing empty strata put offsets at the row width: clamp explicitly
+    # (the pick is zero-weighted via `occupied` below)
+    pick = jnp.minimum(pick, sorted_vals.shape[1] - 1)
+    vals = jnp.take_along_axis(
+        jnp.broadcast_to(sorted_vals[:, None, :],
+                         (a, t, sorted_vals.shape[1])), pick, axis=2)
+    occupied = (counts > 0)[:, None, :]
+    est = jnp.sum(vals * weights[:, None, :] * occupied, axis=2)
+    err = 100.0 * jnp.abs(est - truth[:, None]) / truth[:, None]
+    return est, err
+
+
+_srs_trials_jit = jax.jit(_srs_trials)
+_stratified_trials_jit = jax.jit(_stratified_trials)
+
+
+def _dispatch(fn, fn_jit, mesh, *args):
+    if mesh is None:
+        return fn_jit(*args)
+    from ..distributed.appaxis import app_sharded_cached
+    return app_sharded_cached(fn, mesh)(*args)
+
+
+def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
+               apps: Optional[Sequence[str]] = None,
+               mesh=None) -> TrialResult:
+    """Monte-Carlo selection trials for every app in one program per scheme.
+
+    No host-side per-app or per-trial loops: each scheme is one vmapped
+    (optionally app-sharded) dispatch over the (app, trial, stratum/unit)
+    axes.
+    """
+    apps = tuple(apps or APP_NAMES)
+    exps = engine.build(apps)
+    stack = engine.stack(apps)
+    mesh = engine.mesh if mesh is None else mesh
+    ci = spec.config_index
+    cfg = engine.configs[ci]
+    l_n = engine.num_strata
+    truth = np.stack([e.truth[ci] for e in exps])
+
+    # value pools: census CPI (free) and phase-1 CPI (charged once)
+    census, _ = stack_ragged([e.census(ci) for e in exps], dtype=np.float32)
+    p1_pool = None
+    if any(s in ("rfv", "dg") for s in spec.schemes):
+        cpi, _ = engine.memo.fill(stack.rows, stack.idx1, stack.idx1_valid,
+                                  (cfg,),
+                                  feats=stack.gather_feats(stack.idx1),
+                                  mesh=mesh)
+        p1_pool = cpi[:, 0, :].astype(np.float32)          # (A, n1_max)
+
+    estimates: dict[str, np.ndarray] = {}
+    errors: dict[str, np.ndarray] = {}
+    for scheme in spec.schemes:
+        if scheme == "random":
+            u = trial_uniforms(spec, scheme, len(apps), spec.units_per_trial)
+            est, err = _dispatch(_srs_trials, _srs_trials_jit, mesh,
+                                 u, census, stack.n_regions, truth)
+        else:
+            if scheme == "bbv":
+                labels, lv = stack_ragged([e.bbv_labels for e in exps])
+                pool, weights = census, np.stack(
+                    [e.bbv_weights for e in exps])
+            else:
+                labels, lv = stack_ragged(
+                    [e.rfv_labels if scheme == "rfv" else e.dg_labels
+                     for e in exps])
+                pool = p1_pool
+                weights = np.stack(
+                    [e.rfv_weights if scheme == "rfv" else e.dg_weights
+                     for e in exps])
+            order, offsets, counts = stratum_tables(labels, lv, l_n)
+            sorted_vals = np.take_along_axis(pool, order, axis=1)
+            u = trial_uniforms(spec, scheme, len(apps), l_n)
+            est, err = _dispatch(
+                _stratified_trials, _stratified_trials_jit, mesh,
+                u, sorted_vals, offsets.astype(np.int32),
+                counts.astype(np.int32), weights.astype(np.float32), truth)
+        estimates[scheme] = np.asarray(est)
+        errors[scheme] = np.asarray(err)
+    return TrialResult(apps=apps, spec=spec, estimates=estimates,
+                       errors=errors)

@@ -8,10 +8,16 @@ A sweep is the cross product (apps × configs) for one estimation scheme:
   Figs 10/11): pick units per stratum under ``policy``, project CPI for
   every config, weight by stratum weights.
 
-The driver simulates each app's region set across ALL configs as one
-batched dispatch (``AppExperiment.cpi_all``) and serves repeats from the
-simulator memo, replacing the per-(config, app) Python loops the
-benchmarks used to run.
+The driver is app-sharded: selection is vectorized over the whole app
+stack (``scheme_selection_bank``) and the region sets of ALL apps are
+simulated across the requested configs in ONE vmapped dispatch through the
+engine's shared memo bank — ``shard_map``-ped over the app axis when the
+engine has a mesh. No host-side per-app loops remain on the simulation
+path; Python only assembles the result rows afterwards.
+
+``SweepSpec.trials`` attaches a Monte-Carlo study (``TrialSpec``): the
+sweep additionally runs vmapped selection trials and reports the
+95th-percentile error for rows at the trial config.
 """
 
 from __future__ import annotations
@@ -21,9 +27,9 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ..core.sampling import srs_estimate
+from ..core.sampling.types import critical_value
 from ..simcpu import APP_NAMES
-from .engine import ExperimentEngine, scheme_selection
+from .engine import ExperimentEngine, scheme_selection_bank
 
 SCHEMES = ("srs", "bbv", "rfv", "dg")
 
@@ -37,12 +43,22 @@ class SweepSpec:
     policy: Optional[str] = None             # selection policy (non-srs)
     config_indices: Optional[tuple[int, ...]] = None   # None = all engine configs
     selection_seed: int = 0                  # rng seed for policy="random"
+    # optional Monte-Carlo study riding along (see experiments.montecarlo):
+    # rows at trials.config_index gain a 95th-percentile |error| column
+    trials: Optional["TrialSpec"] = None     # noqa: F821
 
     def __post_init__(self):
         if self.scheme not in SCHEMES:
             raise ValueError(f"unknown scheme {self.scheme!r}")
         if self.scheme != "srs" and self.policy is None:
             object.__setattr__(self, "policy", "centroid")
+        if (self.trials is not None and self.config_indices is not None
+                and self.trials.config_index not in self.config_indices):
+            raise ValueError(
+                f"trials.config_index={self.trials.config_index} is not in "
+                f"config_indices={self.config_indices}; the Monte-Carlo "
+                "study would run (and charge the ledger) with its result "
+                "attached to no row")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +71,7 @@ class SweepRow:
     err_pct: float        # 100 * |estimate - truth| / truth
     n_units: int          # regions the estimate is built from
     margin_pct: Optional[float] = None   # 95% margin (srs scheme only)
+    p95_err_pct: Optional[float] = None  # Monte-Carlo p95 |error| (trials)
 
 
 class ResultsTable:
@@ -89,44 +106,95 @@ class ResultsTable:
         return out
 
     def to_csv(self) -> str:
-        hdr = "app,scheme,config_index,estimate,truth,err_pct,n_units,margin_pct"
+        hdr = ("app,scheme,config_index,estimate,truth,err_pct,n_units,"
+               "margin_pct,p95_err_pct")
         lines = [hdr]
         for r in self.rows:
             m = "" if r.margin_pct is None else f"{r.margin_pct:.4f}"
+            p = "" if r.p95_err_pct is None else f"{r.p95_err_pct:.4f}"
             lines.append(f"{r.app},{r.scheme},{r.config_index},"
                          f"{r.estimate:.6f},{r.truth:.6f},{r.err_pct:.4f},"
-                         f"{r.n_units},{m}")
+                         f"{r.n_units},{m},{p}")
         return "\n".join(lines)
 
 
-def run_sweep(engine: ExperimentEngine, spec: SweepSpec) -> ResultsTable:
-    """Execute one sweep; one batched dispatch per app over the requested
-    configs (only those are simulated and ledger-charged)."""
+def _srs_stats(cpi: np.ndarray, valid: np.ndarray
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized ``srs_estimate`` over an (A, C, K) masked CPI stack:
+    returns (A, C) means and margins (percent)."""
+    x = cpi.astype(np.float64)
+    v = valid[:, None, :]
+    n = valid.sum(axis=1).astype(np.float64)[:, None]      # (A, 1)
+    mean = np.where(v, x, 0.0).sum(axis=2) / n
+    s2 = np.where(v, (x - mean[:, :, None]) ** 2, 0.0).sum(axis=2) \
+        / np.maximum(n - 1.0, 1.0)
+    crit = np.asarray([critical_value(0.95, nn - 1 if nn < 30 else None)
+                       for nn in n[:, 0]])
+    margin = crit[:, None] * np.sqrt(s2 / n)
+    return mean, 100.0 * margin / np.abs(mean)
+
+
+def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
+              mesh=None) -> ResultsTable:
+    """Execute one sweep: ONE batched (optionally app-sharded) dispatch
+    over all apps × requested configs (only those are simulated and
+    ledger-charged)."""
+    exps = engine.build(spec.apps)
+    stack = engine.stack(spec.apps)
+    mesh = engine.mesh if mesh is None else mesh
     cfg_is = (tuple(range(len(engine.configs)))
               if spec.config_indices is None else spec.config_indices)
+    cfgs = tuple(engine.configs[i] for i in cfg_is)
+    truth = np.stack([e.truth for e in exps])[:, list(cfg_is)]   # (A, C')
+
+    if spec.scheme == "srs":
+        cpi, _ = engine.memo.fill(stack.rows, stack.idx1, stack.idx1_valid,
+                                  cfgs, feats=stack.gather_feats(stack.idx1),
+                                  mesh=mesh)
+        ests, margins = _srs_stats(cpi, stack.idx1_valid)
+        n_units = stack.idx1_valid.sum(axis=1)
+    else:
+        picks, valid, weights = scheme_selection_bank(
+            exps, spec.scheme, spec.policy, seed=spec.selection_seed)
+        cpi, _ = engine.memo.fill(stack.rows, picks, valid, cfgs,
+                                  feats=stack.gather_feats(picks), mesh=mesh)
+        covered = np.where(valid, weights, 0.0).sum(axis=1)      # (A,)
+        total = weights.sum(axis=1)
+        low = covered < total * (1.0 - 1e-6)
+        if low.any():
+            import warnings
+            bad = [spec.apps[a] for a in np.flatnonzero(low)]
+            warnings.warn(
+                f"selected units cover only part of the stratum weight for "
+                f"{bad}; renormalizing biases those estimates",
+                UserWarning, stacklevel=2)
+        w = np.where(valid, weights, 0.0)
+        ests = (cpi * w[:, None, :]).sum(axis=2) / covered[:, None]
+        margins = None
+        n_units = valid.sum(axis=1)
+
+    p95 = None
+    if spec.trials is not None:
+        from .montecarlo import run_trials
+        mc_scheme = "random" if spec.scheme == "srs" else spec.scheme
+        mc = run_trials(engine,
+                        dataclasses.replace(spec.trials,
+                                            schemes=(mc_scheme,)),
+                        apps=spec.apps, mesh=mesh)
+        p95 = mc.p95(mc_scheme)
+
     rows: list[SweepRow] = []
-    for name in spec.apps:
-        exp = engine.app(name)
-        if spec.scheme == "srs":
-            mat = exp.cpi_for(exp.idx1, cfg_is)            # (C', n1)
-            for pos, ci in enumerate(cfg_is):
-                est = srs_estimate(mat[pos])
-                rows.append(SweepRow(
-                    app=name, scheme="srs", config_index=ci,
-                    estimate=est.mean, truth=float(exp.truth[ci]),
-                    err_pct=100 * abs(est.mean - exp.truth[ci])
-                    / exp.truth[ci],
-                    n_units=exp.idx1.size, margin_pct=est.margin_pct))
-            continue
-        sel, weights = scheme_selection(exp, spec.scheme, spec.policy,
-                                        seed=spec.selection_seed)
-        ests = exp.weighted_cpi_all(sel, weights, config_indices=cfg_is)
-        n_sel = int(sum(s.size for s in sel))
+    for a, name in enumerate(spec.apps):
         for pos, ci in enumerate(cfg_is):
+            est, tr = float(ests[a, pos]), float(truth[a, pos])
             rows.append(SweepRow(
                 app=name, scheme=spec.scheme, config_index=ci,
-                estimate=float(ests[pos]), truth=float(exp.truth[ci]),
-                err_pct=float(100 * abs(ests[pos] - exp.truth[ci])
-                              / exp.truth[ci]),
-                n_units=n_sel, margin_pct=None))
+                estimate=est, truth=tr,
+                err_pct=100.0 * abs(est - tr) / tr,
+                n_units=int(n_units[a]),
+                margin_pct=(float(margins[a, pos])
+                            if margins is not None else None),
+                p95_err_pct=(float(p95[a])
+                             if p95 is not None
+                             and spec.trials.config_index == ci else None)))
     return ResultsTable(rows)

@@ -11,7 +11,7 @@ XLA_FLAGS before any jax initialization.
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -36,6 +36,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     # build the mesh on a slice.
     grid = np.asarray(devs[:need]).reshape(shape)
     return Mesh(grid, axes)
+
+
+def make_app_mesh(max_devices: Optional[int] = None) -> Mesh:
+    """1-D ``("app",)`` mesh for app-sharded sweeps (experiment engine).
+
+    The application axis of a stacked sweep is pure data parallelism:
+    lanes never communicate, so any device count works — the engine pads
+    the app axis up to it by edge replication.
+    """
+    devs = jax.devices()
+    n = len(devs) if max_devices is None else max(1, min(max_devices,
+                                                         len(devs)))
+    return Mesh(np.asarray(devs[:n]), ("app",))
 
 
 def make_host_mesh(model_parallel: int = 1) -> Mesh:

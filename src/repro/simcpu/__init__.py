@@ -1,21 +1,26 @@
 """Synthetic CPU-simulation substrate (stands in for gem5 + SPECint 2017)."""
 
 from .bbv import NUM_BLOCKS, get_bbvs, synthesize_bbvs
-from .cache import CachedSimulator, make_cached_simulator
-from .perfmodel import (config_matrix, cpi_batch, cpi_only, evaluate_regions,
-                        evaluate_regions_batch, stats_matrix)
+from .cache import CachedSimulator, MemoBank, make_cached_simulator
+from .perfmodel import (config_matrix, cpi_bank, cpi_batch, cpi_only,
+                        evaluate_regions, evaluate_regions_batch, rfv_bank,
+                        stats_matrix)
 from .simulator import CycleAccurateSimulator, Ledger, make_simulator
 from .uarch import BASELINE, CONFIGS, UarchConfig
 from .workload import (APP_NAMES, APP_SPECS, REGION_LEN_INSTR, AppPopulation,
-                       AppSpec, generate_population, get_population)
+                       AppSpec, PopulationBank, build_population_bank,
+                       generate_population, get_population,
+                       get_population_bank, stack_ragged)
 
 __all__ = [
     "UarchConfig", "CONFIGS", "BASELINE",
     "AppSpec", "AppPopulation", "APP_SPECS", "APP_NAMES",
     "generate_population", "get_population", "REGION_LEN_INSTR",
+    "PopulationBank", "build_population_bank", "get_population_bank",
+    "stack_ragged",
     "evaluate_regions", "evaluate_regions_batch", "cpi_batch", "cpi_only",
-    "config_matrix", "stats_matrix",
+    "cpi_bank", "rfv_bank", "config_matrix", "stats_matrix",
     "synthesize_bbvs", "get_bbvs", "NUM_BLOCKS",
     "CycleAccurateSimulator", "Ledger", "make_simulator",
-    "CachedSimulator", "make_cached_simulator",
+    "CachedSimulator", "MemoBank", "make_cached_simulator",
 ]

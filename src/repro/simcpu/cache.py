@@ -1,16 +1,26 @@
-"""Memoizing simulation cache (region × config memo table).
+"""Array-native memoizing simulation cache (app x config x region memo).
 
-``CachedSimulator`` wraps ``CycleAccurateSimulator`` so that each region is
-*simulated once per configuration*: repeated requests for the same
-(region, config) pair are served from the memo table and charge the
-``Ledger`` nothing. This fixes the double-charging that occurs when
-benchmarks re-simulate the same selected regions across figures — the
-paper's cost unit is "number of 1 M-instruction region simulations", and a
-real simulation farm would of course keep the results it already paid for.
+``MemoBank`` is the cost-accounting heart of the sweep engine: one
+``(A, C, N)`` mask + value table covering every (application, config,
+region) triple the experiments have paid for. The ledger is charged for
+cache *misses only* — the paper's cost unit is "number of 1 M-instruction
+region simulations", and a real simulation farm keeps the results it
+already paid for. Because the perf model is deterministic, the bank can be
+filled by any dispatch path (single app, stacked apps, app-sharded over a
+mesh) and later ``merge``-d: device-local banks from a sharded sweep fold
+into one table whose charge totals equal a single-host run's.
 
-The memo is compact: per config it stores only the rows actually simulated
-(a position map + a growing (rows, 38) matrix), not dense (N, 38) tables,
-so caching all 7 configs for all 10 apps stays in the tens of MB.
+``CachedSimulator`` keeps the historic per-app surface (``simulate``,
+``simulate_cpi``, ``simulate_cpi_batch``) as a one-row view over a
+``MemoBank`` — standalone construction gets a private bank; the experiment
+engine hands every app a row of its shared bank so one sweep-wide fill is
+ONE vmapped (optionally ``shard_map``-ped) dispatch.
+
+Value memoization covers CPI (the sweep/trial hot path). Full-38-metric
+requests (``simulate``/``simulate_rfv``) re-run the vectorized perf model
+each call — deterministic, so values never change, and NOT re-charged
+(the mask is the single source of cost truth) — a deliberate trade: the
+bank stays a compact (A, C, N) value table instead of (A, C, N, 38).
 
 ``census_stats`` stays analysis-only (free of charge, like the base
 simulator) and deliberately does NOT populate the charged memo — otherwise
@@ -25,62 +35,191 @@ from typing import Optional, Sequence
 import numpy as np
 
 from ..core.features import build_rfv
-from .perfmodel import evaluate_regions_batch
+from .perfmodel import cpi_bank, evaluate_regions_batch
 from .simulator import CycleAccurateSimulator, Ledger
 from .uarch import UarchConfig
 from .workload import get_population
 
 
-class _ConfigMemo:
-    """Rows simulated so far for one config: region -> row position."""
-
-    __slots__ = ("pos", "data")
+class MemoBank:
+    """Growable ``(A, C, N)`` mask + CPI-value memo with per-app ledgers."""
 
     def __init__(self):
-        self.pos: dict[int, int] = {}
-        self.data: Optional[np.ndarray] = None   # (capacity, n_metrics)
+        self.names: list[str] = []
+        self.ledgers: list[Optional[Ledger]] = []
+        self.n_regions: list[int] = []
+        self.hit_count: list[int] = []     # per-app requested-and-cached units
+        self.miss_count: list[int] = []    # per-app newly-charged units
+        self._cfg_cols: dict[UarchConfig, int] = {}
+        self.configs: list[UarchConfig] = []
+        self.mask = np.zeros((0, 0, 0), bool)         # (A, C, N)
+        self.cpi = np.zeros((0, 0, 0), np.float32)    # (A, C, N)
+        self.charges = np.zeros((0, 0), np.int64)     # (A, C) miss counts
 
-    def missing(self, idx: np.ndarray) -> np.ndarray:
-        pos = self.pos
-        return np.unique(np.asarray(
-            [i for i in idx.tolist() if i not in pos], np.int64))
+    # -- shape management ---------------------------------------------------
+    @property
+    def num_apps(self) -> int:
+        return len(self.names)
 
-    def store(self, idx: np.ndarray, rows: np.ndarray) -> None:
-        n_new = idx.size
-        if n_new == 0:
+    def _grow(self, a: int, c: int, n: int) -> None:
+        a0, c0, n0 = self.mask.shape
+        if (a, c, n) == (a0, c0, n0):
             return
-        n_old = len(self.pos)
-        if self.data is None:
-            cap = max(n_new, 64)
-            self.data = np.empty((cap, rows.shape[1]), np.float32)
-        elif n_old + n_new > self.data.shape[0]:
-            cap = max(2 * self.data.shape[0], n_old + n_new)
-            grown = np.empty((cap, self.data.shape[1]), np.float32)
-            grown[:n_old] = self.data[:n_old]
-            self.data = grown
-        self.data[n_old:n_old + n_new] = rows
-        for j, i in enumerate(idx.tolist()):
-            self.pos[i] = n_old + j
+        mask = np.zeros((a, c, n), bool)
+        cpi = np.zeros((a, c, n), np.float32)
+        charges = np.zeros((a, c), np.int64)
+        mask[:a0, :c0, :n0] = self.mask
+        cpi[:a0, :c0, :n0] = self.cpi
+        charges[:a0, :c0] = self.charges
+        self.mask, self.cpi, self.charges = mask, cpi, charges
 
-    def rows(self, idx: np.ndarray) -> np.ndarray:
-        pos = self.pos
-        return self.data[[pos[i] for i in idx.tolist()]]
+    def add_app(self, name: str, n_regions: int,
+                ledger: Optional[Ledger] = None) -> int:
+        """Register an app row; returns its row index."""
+        row = len(self.names)
+        self.names.append(name)
+        self.ledgers.append(ledger)
+        self.n_regions.append(int(n_regions))
+        self.hit_count.append(0)
+        self.miss_count.append(0)
+        a0, c0, n0 = self.mask.shape
+        self._grow(row + 1, c0, max(n0, int(n_regions)))
+        return row
+
+    def cols_for(self, cfgs: Sequence[UarchConfig]) -> np.ndarray:
+        """Column indices for configs, growing the config axis as needed."""
+        for cfg in cfgs:
+            if cfg not in self._cfg_cols:
+                self._cfg_cols[cfg] = len(self.configs)
+                self.configs.append(cfg)
+        a0, c0, n0 = self.mask.shape
+        self._grow(a0, len(self.configs), n0)
+        return np.asarray([self._cfg_cols[c] for c in cfgs], np.int64)
+
+    # -- the one batched fill path ------------------------------------------
+    def fill(self, rows, idx, valid, cfgs: Sequence[UarchConfig], *,
+             feats=None, values=None, mesh=None
+             ) -> tuple[np.ndarray, np.ndarray]:
+        """Serve ``(R, C, K)`` CPI through the memo; charge misses only.
+
+        ``rows``: (R,) app rows; ``idx``: (R, K) region indices (padding
+        allowed, flagged invalid in ``valid``); ``feats``: (R, K, F)
+        gathered features, evaluated in ONE vmapped dispatch (app-sharded
+        when ``mesh`` is given) — or ``values``: (R, C, K) precomputed CPI
+        (full-stats path). Returns ``(cpi, n_miss)`` with ``n_miss`` the
+        per-(row, config) newly-charged region counts.
+        """
+        rows = np.asarray(rows, np.int64)
+        idx = np.asarray(idx, np.int64)
+        valid = np.ones(idx.shape, bool) if valid is None \
+            else np.asarray(valid, bool)
+        cols = self.cols_for(cfgs)
+        n = self.mask.shape[2]
+        r_n, k = idx.shape
+        c_n = cols.size
+        sub = (rows[:, None], cols[None, :])
+
+        req = np.zeros((r_n, n), bool)
+        rr = np.broadcast_to(np.arange(r_n)[:, None], idx.shape)
+        req[rr[valid], idx[valid]] = True
+        miss = req[:, None, :] & ~self.mask[sub]          # (R, C, N)
+        n_miss = miss.sum(axis=2)                          # (R, C)
+        requested = valid.sum(axis=1) * c_n                # (R,) incl. dups
+        for i, row in enumerate(rows.tolist()):
+            self.miss_count[row] += int(n_miss[i].sum())
+            self.hit_count[row] += int(requested[i] - n_miss[i].sum())
+
+        if not n_miss.any():                               # fully memoized
+            out = np.take_along_axis(self.cpi[sub],
+                                     np.broadcast_to(idx[:, None, :],
+                                                     (r_n, c_n, k)), axis=2)
+            return out, n_miss
+
+        if values is None:
+            values = cpi_bank(feats, cfgs, mesh=mesh)      # (R, C, K)
+        values = np.asarray(values, np.float32)
+
+        # scatter valid entries into dense (R, C, N), then write misses only
+        dense = np.zeros((r_n, c_n, n), np.float32)
+        r3 = np.broadcast_to(np.arange(r_n)[:, None, None], values.shape)
+        c3 = np.broadcast_to(np.arange(c_n)[None, :, None], values.shape)
+        i3 = np.broadcast_to(idx[:, None, :], values.shape)
+        v3 = np.broadcast_to(valid[:, None, :], values.shape)
+        dense[r3[v3], c3[v3], i3[v3]] = values[v3]
+        blk = self.cpi[sub]
+        self.cpi[sub] = np.where(miss, dense, blk)
+        self.mask[sub] |= miss
+        self.charges[sub] += n_miss
+        for i, row in enumerate(rows.tolist()):
+            ledger = self.ledgers[row]
+            if ledger is not None:
+                ledger.charge(int(n_miss[i].sum()))
+        out = np.take_along_axis(self.cpi[sub],
+                                 np.broadcast_to(idx[:, None, :],
+                                                 (r_n, c_n, k)), axis=2)
+        return out, n_miss
+
+    # -- cross-device merge --------------------------------------------------
+    def merge(self, other: "MemoBank") -> None:
+        """Fold a device-local bank into this one.
+
+        Apps/configs unknown here are added. Values for entries both banks
+        hold agree by determinism; charges ADD (each device paid for its
+        own misses), so merged ledger totals equal a single-host run's when
+        the work was partitioned disjointly.
+        """
+        row_map = []
+        for name, n_reg in zip(other.names, other.n_regions):
+            if name in self.names:
+                row_map.append(self.names.index(name))
+            else:
+                row_map.append(self.add_app(name, n_reg, Ledger()))
+        cols = self.cols_for(other.configs)
+        n_other = other.mask.shape[2]
+        for i, row in enumerate(row_map):
+            om = other.mask[i]                  # (C_other, N_other)
+            sl = (row, cols[:, None], np.arange(n_other)[None, :])
+            new = om & ~self.mask[sl]
+            self.cpi[sl] = np.where(new, other.cpi[i], self.cpi[sl])
+            self.mask[sl] |= om
+            self.charges[row, cols] += other.charges[i]
+            self.hit_count[row] += other.hit_count[i]
+            self.miss_count[row] += other.miss_count[i]
+            ledger = self.ledgers[row]
+            if ledger is not None:
+                ledger.charge(int(other.charges[i].sum()))
+
+    def total_charges(self) -> int:
+        return int(self.charges.sum())
 
 
 class CachedSimulator:
-    """``CycleAccurateSimulator`` with a region × config memo table.
+    """``CycleAccurateSimulator`` with an app-row view over a ``MemoBank``.
 
     Same interface as the base simulator; the ledger is charged only for
     cache *misses*. ``hits`` / ``misses`` count requested region-units
     served from / added to the memo.
     """
 
-    def __init__(self, sim: CycleAccurateSimulator):
+    def __init__(self, sim: CycleAccurateSimulator, *,
+                 bank: Optional[MemoBank] = None, row: Optional[int] = None):
         self.sim = sim
-        self._memo: dict[UarchConfig, _ConfigMemo] = {}
-        self._metrics: Optional[tuple[str, ...]] = None
-        self.hits = 0
-        self.misses = 0
+        if bank is None:
+            bank = MemoBank()
+            row = bank.add_app(sim.pop.spec.name, sim.pop.n_regions,
+                               sim.ledger)
+        self.bank = bank
+        self.row = int(row)
+
+    # hit/miss accounting lives on the bank so engine-level stacked fills
+    # are reflected in every app view
+    @property
+    def hits(self) -> int:
+        return self.bank.hit_count[self.row]
+
+    @property
+    def misses(self) -> int:
+        return self.bank.miss_count[self.row]
 
     # base-simulator surface -------------------------------------------------
     @property
@@ -91,43 +230,26 @@ class CachedSimulator:
     def ledger(self) -> Ledger:
         return self.sim.ledger
 
-    def _fill(self, cfgs: Sequence[UarchConfig], idx: np.ndarray) -> None:
-        """Simulate whatever part of ``idx`` is missing, one batched dispatch
-        over all configs; charge each config only for its own misses."""
-        memos = [self._memo.setdefault(c, _ConfigMemo()) for c in cfgs]
-        missing = [m.missing(idx) for m in memos]
-        union = np.unique(np.concatenate(missing)) if missing else \
-            np.empty(0, np.int64)
-        if union.size == 0 and self._metrics is not None:
-            return
-        stats = evaluate_regions_batch(self.pop.features, cfgs, union)
-        if self._metrics is None:
-            self._metrics = tuple(stats)
-        mat = np.stack([stats[k] for k in self._metrics], axis=2)  # (C,n,M)
-        for ci, (memo, miss) in enumerate(zip(memos, missing)):
-            self.ledger.charge(miss.size)
-            self.misses += int(miss.size)
-            # every union region was requested for every config, so storing
-            # the full union is "simulated once per config", not pre-charging
-            new = union[[j for j, i in enumerate(union.tolist())
-                         if i not in memo.pos]]
-            sel = np.searchsorted(union, new)
-            memo.store(new, mat[ci, sel])
-
-    def _lookup(self, cfg: UarchConfig, idx: np.ndarray
-                ) -> dict[str, np.ndarray]:
-        rows = self._memo[cfg].rows(idx)
-        return {k: rows[:, j] for j, k in enumerate(self._metrics)}
+    def _fill(self, idx: np.ndarray, cfgs: Sequence[UarchConfig],
+              values=None) -> np.ndarray:
+        feats = None if values is not None else \
+            self.pop.features[idx][None].astype(np.float32)
+        cpi, _ = self.bank.fill(
+            np.asarray([self.row]), idx[None, :], None, cfgs,
+            feats=feats, values=values)
+        return cpi[0]
 
     def simulate(self, indices, cfg: UarchConfig) -> dict[str, np.ndarray]:
+        """All 38 Table III counters; CPI memoized, misses charged once."""
         idx = np.atleast_1d(np.asarray(indices, np.int64))
-        before = self.misses
-        self._fill((cfg,), idx)
-        self.hits += int(idx.size) - (self.misses - before)
-        return self._lookup(cfg, idx)
+        stats = evaluate_regions_batch(self.pop.features, (cfg,), idx)
+        stats = {m: v[0] for m, v in stats.items()}
+        self._fill(idx, (cfg,), values=stats["cpi"][None, None, :])
+        return stats
 
     def simulate_cpi(self, indices, cfg: UarchConfig) -> np.ndarray:
-        return self.simulate(indices, cfg)["cpi"]
+        idx = np.atleast_1d(np.asarray(indices, np.int64))
+        return self._fill(idx, (cfg,))[0]
 
     def simulate_rfv(self, indices, cfg: UarchConfig
                      ) -> tuple[np.ndarray, np.ndarray]:
@@ -140,16 +262,14 @@ class CachedSimulator:
         """Metric dict of (C, n) matrices for ``indices`` across ``cfgs``,
         evaluated in one vmapped dispatch; misses charged per config."""
         idx = np.atleast_1d(np.asarray(indices, np.int64))
-        before = self.misses
-        self._fill(tuple(cfgs), idx)
-        self.hits += int(idx.size) * len(cfgs) - (self.misses - before)
-        per_cfg = [self._lookup(c, idx) for c in cfgs]
-        return {k: np.stack([s[k] for s in per_cfg])
-                for k in self._metrics}
+        stats = evaluate_regions_batch(self.pop.features, cfgs, idx)
+        self._fill(idx, tuple(cfgs), values=stats["cpi"][None])
+        return stats
 
     def simulate_cpi_batch(self, indices, cfgs: Sequence[UarchConfig]
                            ) -> np.ndarray:
-        return self.simulate_batch(indices, cfgs)["cpi"]
+        idx = np.atleast_1d(np.asarray(indices, np.int64))
+        return self._fill(idx, tuple(cfgs))
 
     # -- ground truth (free of charge, never touches the charged memo) ------
     def census_stats(self, cfg: UarchConfig) -> dict[str, np.ndarray]:
@@ -160,6 +280,8 @@ class CachedSimulator:
 
 
 def make_cached_simulator(app_name: str, *, seed: int = 0,
-                          ledger: Optional[Ledger] = None) -> CachedSimulator:
-    return CachedSimulator(
-        CycleAccurateSimulator(get_population(app_name, seed=seed), ledger))
+                          ledger: Optional[Ledger] = None,
+                          bank: Optional[MemoBank] = None,
+                          row: Optional[int] = None) -> CachedSimulator:
+    sim = CycleAccurateSimulator(get_population(app_name, seed=seed), ledger)
+    return CachedSimulator(sim, bank=bank, row=row)

@@ -224,6 +224,62 @@ def cpi_only(features: np.ndarray, cfg: UarchConfig, indices=None) -> np.ndarray
     return evaluate_regions(features, cfg, indices)["cpi"]
 
 
+# --- app-axis (bank) entry points ------------------------------------------
+# The application axis of a PopulationBank is plain data parallelism: the
+# same fused model vmapped over the leading (A, ...) axis. These programs
+# are what the experiment engine shards over an ("app",) mesh — per-app
+# lanes never communicate, so sharded and single-device results agree.
+def _cpi_bank_fn(x: jnp.ndarray, cm: jnp.ndarray) -> jnp.ndarray:
+    """(A, N, F) features x (C, 14) configs -> (A, C, N) CPI."""
+    per_app = lambda xa: jax.vmap(_evaluate, in_axes=(None, 0))(xa, cm)["cpi"]
+    return jax.vmap(per_app)(x)
+
+
+def _rfv_bank_fn(x: jnp.ndarray, cv: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(A, N, F) features x one config vector -> ((A, N) cpi, (A, N, 38) rfv)."""
+    stats = jax.vmap(lambda xa: _evaluate(xa, cv))(x)
+    rfv = jnp.stack([stats[m] for m in RFV_METRICS], axis=-1)
+    return stats["cpi"], rfv
+
+
+_cpi_bank_jit = jax.jit(_cpi_bank_fn)
+_rfv_bank_jit = jax.jit(_rfv_bank_fn)
+
+
+def _sharded(fn, mesh):
+    from ..distributed.appaxis import app_sharded_cached
+    return app_sharded_cached(fn, mesh, (1,))
+
+
+def _as_config_matrix(cfgs) -> jnp.ndarray:
+    return cfgs if hasattr(cfgs, "ndim") else config_matrix(cfgs)
+
+
+def cpi_bank(features, cfgs, *, mesh=None) -> np.ndarray:
+    """(A, C, N) CPI matrix for stacked app features, one batched dispatch.
+
+    ``features``: (A, N, F) stacked (possibly padded) app feature arrays;
+    ``cfgs``: a config sequence or a prebuilt (C, 14) matrix. With ``mesh``
+    (a 1-D ``("app",)`` mesh) the app axis runs device-parallel with
+    results identical to the single-device path.
+    """
+    x = jnp.asarray(features, jnp.float32)
+    cm = _as_config_matrix(cfgs)
+    fn = _cpi_bank_jit if mesh is None else _sharded(_cpi_bank_fn, mesh)
+    return np.asarray(fn(x, cm))
+
+
+def rfv_bank(features, cfg: UarchConfig, *, mesh=None
+             ) -> tuple[np.ndarray, np.ndarray]:
+    """Stacked phase-1 measurement: (A, N) CPI + (A, N, 38) RFV matrix."""
+    x = jnp.asarray(features, jnp.float32)
+    cv = _config_vector(cfg)
+    fn = _rfv_bank_jit if mesh is None else _sharded(_rfv_bank_fn, mesh)
+    cpi, rfv = fn(x, cv)
+    return np.asarray(cpi), np.asarray(rfv)
+
+
 def stats_matrix(stats: Mapping[str, np.ndarray]) -> np.ndarray:
     """Order the stats dict into the canonical 38-column RFV matrix."""
     return np.stack([np.asarray(stats[m]) for m in RFV_METRICS], axis=1)

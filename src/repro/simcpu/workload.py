@@ -343,3 +343,73 @@ def get_population(name: str, *, seed: int = 0) -> AppPopulation:
                            f"available: {APP_NAMES}")
         _POP_CACHE[key] = generate_population(spec, seed=seed)
     return _POP_CACHE[key]
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationBank:
+    """Stacked populations: the app axis as a data-parallel array dimension.
+
+    All apps' region features live in ONE ``(A, N, F)`` array (zero-padded
+    to the largest population, with a validity ``mask``) so the perf model,
+    the memo table, and the Monte-Carlo trial engine can treat "application"
+    as just another batch axis — vmapped on one device, sharded over an
+    ``("app",)`` mesh across many.
+    """
+
+    names: tuple[str, ...]
+    pops: tuple[AppPopulation, ...]
+    features: np.ndarray      # (A, N_max, NUM_FEATURES) float32, zero-padded
+    mask: np.ndarray          # (A, N_max) bool — True for real regions
+    n_regions: np.ndarray     # (A,) int64
+
+    @property
+    def num_apps(self) -> int:
+        return len(self.names)
+
+    @property
+    def max_regions(self) -> int:
+        return int(self.features.shape[1])
+
+    def row(self, name: str) -> int:
+        return self.names.index(name)
+
+    def pop(self, name: str) -> AppPopulation:
+        return self.pops[self.row(name)]
+
+
+def stack_ragged(arrays, *, dtype=None, fill=0) -> tuple[np.ndarray, np.ndarray]:
+    """Stack same-rank arrays of ragged leading length into (A, K_max, ...).
+
+    Returns ``(stacked, valid)`` where ``valid`` is the (A, K_max) bool
+    row-validity mask. The padded tail is filled with ``fill``.
+    """
+    arrays = [np.asarray(a) for a in arrays]
+    k_max = max((a.shape[0] for a in arrays), default=0)
+    trail = arrays[0].shape[1:] if arrays else ()
+    out = np.full((len(arrays), k_max) + trail, fill,
+                  dtype=dtype or arrays[0].dtype)
+    valid = np.zeros((len(arrays), k_max), bool)
+    for i, a in enumerate(arrays):
+        out[i, :a.shape[0]] = a
+        valid[i, :a.shape[0]] = True
+    return out, valid
+
+
+def build_population_bank(names, *, seed: int = 0) -> PopulationBank:
+    names = tuple(names)
+    pops = tuple(get_population(n, seed=seed) for n in names)
+    feats, mask = stack_ragged([p.features for p in pops], dtype=np.float32)
+    return PopulationBank(
+        names=names, pops=pops, features=feats, mask=mask,
+        n_regions=np.asarray([p.n_regions for p in pops], np.int64))
+
+
+_BANK_CACHE: dict[tuple[tuple[str, ...], int], PopulationBank] = {}
+
+
+def get_population_bank(names=APP_NAMES, *, seed: int = 0) -> PopulationBank:
+    """Cached stacked-population lookup (shares ``get_population`` entries)."""
+    key = (tuple(names), seed)
+    if key not in _BANK_CACHE:
+        _BANK_CACHE[key] = build_population_bank(names, seed=seed)
+    return _BANK_CACHE[key]
