@@ -37,7 +37,7 @@ def main() -> None:
     if args.devices is not None:
         _force_devices(args.devices)
 
-    from . import kernels_bench, paper_figs
+    from . import kernels_bench, kmeans_batched_bench, paper_figs
 
     benches = {
         "fig1_cpi_distributions": paper_figs.bench_cpi_distributions,
@@ -54,6 +54,7 @@ def main() -> None:
         "beyond_approx_phase1": paper_figs.bench_approx_phase1,
         "beyond_isa_features": paper_figs.bench_isa_features,
         "kernels": kernels_bench.bench_kernels,
+        "kmeans_batched": kmeans_batched_bench.bench_kmeans_batched,
     }
     if args.only:
         names = args.only.split(",")
@@ -117,6 +118,11 @@ def main() -> None:
         check("gcc_k50_fixes_bbv", rg.get(50, 99) < rg.get(20, 0),
               f"k=20: {rg.get(20, 0):.1f}% -> k=50: {rg.get(50, 99):.1f}% "
               "(paper: 5.4% at k=50)")
+
+    rb = results.get("kmeans_batched")
+    if rb:
+        check("batched_assign_matches_oracle", rb["worst_agree"] > 0.999,
+              f"worst batched-vs-oracle agreement {rb['worst_agree']:.4f}")
 
     # a bench that crashed is a failure even if no claim row references it
     check("no_bench_errors", not errors,

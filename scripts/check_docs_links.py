@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Markdown link checker for README.md + docs/ (lychee-lite, offline).
+
+Verifies that every relative markdown link resolves to an existing file,
+and that ``#anchor`` fragments pointing into markdown files match a
+heading in the target (GitHub slug rules: lowercase, punctuation
+stripped, spaces → dashes). External ``http(s)``/``mailto`` links are
+skipped — CI has no network. Exit code 1 with a listing on any broken
+link.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug for a heading line."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(md: pathlib.Path) -> set[str]:
+    return {_slug(h) for h in HEADING_RE.findall(md.read_text())}
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
+    """All broken relative links/anchors in one markdown file."""
+    errors: list[str] = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, fragment = target.partition("#")
+        dest = (md.parent / path_part).resolve() if path_part else md
+        if path_part and not dest.exists():
+            errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+            continue
+        if fragment and dest.suffix == ".md":
+            if fragment not in _anchors(dest):
+                errors.append(f"{md.relative_to(root)}: missing anchor "
+                              f"#{fragment} in {path_part or md.name}")
+    return errors
+
+
+def main() -> int:
+    """Check README.md and every markdown file under docs/."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    errors: list[str] = []
+    for md in files:
+        if md.exists():
+            errors.extend(check_file(md, root))
+    for e in errors:
+        print(e)
+    print(f"check_docs_links: {len(files)} files, {len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

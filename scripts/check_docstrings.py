@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Docstring presence checker (pydocstyle-lite) for scoped packages.
+
+The container/CI images don't ship pydocstyle or ruff, so this is a small
+AST-based stand-in enforcing the subset we care about on the public
+experiment/kernel surface:
+
+* every module has a module docstring (D100/D104);
+* every public class, function and method — name not starting with
+  ``_``, not a dunder — has a docstring (D101/D102/D103).
+
+Scope defaults to ``src/repro/experiments`` and ``src/repro/kernels``
+(the packages whose surface the docs tree documents). Exit code 1 with a
+``path:line: symbol`` listing on any violation.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+DEFAULT_SCOPE = ("src/repro/experiments", "src/repro/kernels")
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _check_body(body: list[ast.stmt], qual: str, path: pathlib.Path,
+                errors: list[str]) -> None:
+    """Recurse over class/module bodies collecting undocumented symbols."""
+    for node in body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _is_public(node.name) and ast.get_docstring(node) is None:
+                errors.append(f"{path}:{node.lineno}: missing docstring on "
+                              f"function {qual}{node.name}")
+        elif isinstance(node, ast.ClassDef):
+            if _is_public(node.name):
+                if ast.get_docstring(node) is None:
+                    errors.append(f"{path}:{node.lineno}: missing docstring "
+                                  f"on class {qual}{node.name}")
+                _check_body(node.body, f"{qual}{node.name}.", path, errors)
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    """All docstring violations in one Python file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    errors: list[str] = []
+    if ast.get_docstring(tree) is None:
+        errors.append(f"{path}:1: missing module docstring")
+    _check_body(tree.body, "", path, errors)
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    """Check every ``.py`` under the given (or default) scope paths."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    scope = argv or [str(root / p) for p in DEFAULT_SCOPE]
+    errors: list[str] = []
+    n_files = 0
+    for top in scope:
+        if not pathlib.Path(top).is_dir():
+            errors.append(f"{top}: scope path does not exist — the check "
+                          "would pass vacuously")
+            continue
+        for path in sorted(pathlib.Path(top).rglob("*.py")):
+            if "__pycache__" in path.parts:
+                continue
+            n_files += 1
+            errors.extend(check_file(path))
+    if n_files == 0:
+        errors.append("no Python files found in scope")
+    for e in errors:
+        print(e)
+    print(f"check_docstrings: {n_files} files, {len(errors)} violation(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

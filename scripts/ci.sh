@@ -20,5 +20,10 @@ fi
 # degrades gracefully without them
 pip install -q -r requirements-dev.txt 2>/dev/null || true
 
+# docs gate: docstring presence on the experiments/kernels surface and
+# README/docs link integrity (both offline; see docs/)
+python scripts/check_docstrings.py
+python scripts/check_docs_links.py
+
 python -m pytest -x -q
-python -m benchmarks.run --quick --only fig5_config_sweep,kernels
+python -m benchmarks.run --quick --only fig5_config_sweep,kernels,kmeans_batched

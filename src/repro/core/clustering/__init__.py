@@ -1,12 +1,14 @@
 """Clustering for stratification: k-means, random projection, standardize."""
 
-from .kmeans import (KMeansBank, KMeansResult, best_of, kmeans, kmeans_bank,
-                     kmeans_batch, kmeans_multi_seed)
+from .kmeans import (BackendFallbackWarning, KMeansBank, KMeansResult,
+                     ResolvedBackend, best_of, kmeans, kmeans_bank,
+                     kmeans_batch, kmeans_multi_seed, resolve_backend)
 from .random_projection import projection_matrix, random_project
 from .standardize import Standardizer
 
 __all__ = [
     "kmeans", "kmeans_batch", "kmeans_bank", "kmeans_multi_seed", "best_of",
     "KMeansResult", "KMeansBank",
+    "resolve_backend", "ResolvedBackend", "BackendFallbackWarning",
     "random_project", "projection_matrix", "Standardizer",
 ]

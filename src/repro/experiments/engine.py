@@ -134,6 +134,8 @@ class AppExperiment:
         return (mat * w_per_unit[None, :]).sum(axis=1) / covered
 
     def census(self, cfg_i: int) -> np.ndarray:
+        """(N,) census CPI of every region for config ``cfg_i``
+        (analysis-only ground truth, never ledger-charged)."""
         return self.census_mat[cfg_i]
 
 
@@ -151,6 +153,7 @@ class SweepStack:
 
     @property
     def num_apps(self) -> int:
+        """Number of apps (A) stacked in this view."""
         return len(self.names)
 
     def gather_feats(self, idx: np.ndarray) -> np.ndarray:
@@ -222,10 +225,12 @@ class ExperimentEngine:
         self._stacks: dict[tuple[tuple[str, ...], int], SweepStack] = {}
 
     def app(self, name: str, kmeans_seed: int = 0) -> AppExperiment:
+        """The ``AppExperiment`` view for one app (built on demand)."""
         return self.build((name,), kmeans_seed)[0]
 
     def apps(self, names: Optional[Sequence[str]] = None
              ) -> list[AppExperiment]:
+        """Views for ``names`` (default: all paper apps), built batched."""
         return self.build(tuple(names or APP_NAMES))
 
     def build(self, names: Sequence[str],

@@ -51,6 +51,13 @@ class TrialSpec:
 
 @dataclasses.dataclass(frozen=True)
 class TrialResult:
+    """Per-scheme Monte-Carlo outcomes for one ``run_trials`` study.
+
+    ``estimates[scheme]`` / ``errors[scheme]`` are ``(A, T)`` arrays over
+    the (app, trial) axes: estimated mean CPI and percent |error| vs the
+    census truth at ``spec.config_index``.
+    """
+
     apps: tuple[str, ...]
     spec: TrialSpec
     estimates: dict[str, np.ndarray]   # scheme -> (A, T) estimated mean CPI

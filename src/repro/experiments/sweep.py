@@ -63,6 +63,8 @@ class SweepSpec:
 
 @dataclasses.dataclass(frozen=True)
 class SweepRow:
+    """One (app, config) result row of a sweep's ``ResultsTable``."""
+
     app: str
     scheme: str
     config_index: int
@@ -87,11 +89,13 @@ class ResultsTable:
         return iter(self.rows)
 
     def filter(self, **fields) -> "ResultsTable":
+        """Rows whose attributes equal every ``field=value`` given."""
         return ResultsTable([
             r for r in self.rows
             if all(getattr(r, k) == v for k, v in fields.items())])
 
     def column(self, field: str) -> np.ndarray:
+        """(len(rows),) array of one ``SweepRow`` field, in row order."""
         return np.asarray([getattr(r, field) for r in self.rows])
 
     def matrix(self, field: str = "estimate") -> np.ndarray:
@@ -106,6 +110,8 @@ class ResultsTable:
         return out
 
     def to_csv(self) -> str:
+        """The table as CSV text (header + one line per row; optional
+        margin/p95 columns empty when absent)."""
         hdr = ("app,scheme,config_index,estimate,truth,err_pct,n_units,"
                "margin_pct,p95_err_pct")
         lines = [hdr]

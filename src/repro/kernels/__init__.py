@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the simulation-sampling hot spots.
+
+Each kernel is a subpackage with the same three-file layout — the kernel
+body + launcher (``<name>/<name>.py``), the public padded wrapper
+(``<name>/ops.py``) and a pure-jnp oracle (``<name>/ref.py``). Contracts
+(block shapes, padding rules, batch-grid layout, testing recipe) are
+documented in ``docs/kernels.md``.
+"""

@@ -8,16 +8,23 @@ import jax.numpy as jnp
 
 def kmeans_assign_ref(x: jax.Array, centroids: jax.Array
                       ) -> tuple[jax.Array, jax.Array]:
-    """Nearest-centroid assignment.
+    """Nearest-centroid assignment (correctness reference, any rank).
 
-    x: (n, d); centroids: (k, d). Returns (labels int32 (n,), min squared
-    distance f32 (n,)). Distances computed in f32 with the expanded form
-    |x|^2 - 2 x.cT + |c|^2 (matching the kernel's MXU-friendly formulation).
+    Args:
+      x: ``(..., n, d)`` points; centroids: ``(..., k, d)`` with matching
+        leading (batch) axes — the same contract as ``ops.kmeans_assign``.
+
+    Returns:
+      ``(labels int32 (..., n), min squared distance f32 (..., n))``.
+      Distances computed in f32 with the expanded form
+      |x|^2 - 2 x.cT + |c|^2 (matching the kernel's MXU-friendly
+      formulation).
     """
     x = x.astype(jnp.float32)
     c = centroids.astype(jnp.float32)
-    x2 = jnp.sum(x * x, axis=1, keepdims=True)
-    c2 = jnp.sum(c * c, axis=1)
-    d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]
-    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
-    return labels, jnp.maximum(jnp.min(d2, axis=1), 0.0)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (..., n, 1)
+    c2 = jnp.sum(c * c, axis=-1)                         # (..., k)
+    xc = jnp.einsum("...nd,...kd->...nk", x, c)
+    d2 = x2 - 2.0 * xc + c2[..., None, :]                # (..., n, k)
+    labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    return labels, jnp.maximum(jnp.min(d2, axis=-1), 0.0)
