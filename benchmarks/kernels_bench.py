@@ -47,11 +47,13 @@ def bench_kernels() -> dict:
     print(f"kmeans_assign_pallas_agreement,{agree:.4f},interpret-mode vs ref")
     out["kmeans_agree"] = agree
 
-    # segment stats (stratified moments)
+    # segment stats (stratified moments); backend="pallas" so the kernel
+    # body is actually exercised off-TPU (interpret mode) — the default
+    # "auto" would serve the oracle and compare it to itself
     lab = jnp.asarray(rng.integers(0, 20, 100_000), jnp.int32)
     ref2 = jax.jit(lambda a, b: segment_stats_ref(a, b, 20))
     us2 = _timeit(ref2, x, lab)
-    s1, q1, c1 = segment_stats(x[:8192], lab[:8192], 20)
+    s1, q1, c1 = segment_stats(x[:8192], lab[:8192], 20, backend="pallas")
     s2, q2, c2 = segment_stats_ref(x[:8192], lab[:8192], 20)
     err = float(jnp.max(jnp.abs(s1 - s2)))
     print(f"segment_stats_ref_100k,{us2:.0f},us_per_call")

@@ -157,7 +157,14 @@ def bench_ci_empirical(trials: int = 1000) -> dict:
         r = results[name]
         _row(f"fig8_p95err_{name}", round(r["random"], 1),
              f"bbv={r['bbv']:.1f};rfv={r['rfv']:.1f};dg={r['dg']:.1f}")
+    # the Fig 8 -> CI-claim bridge: empirical coverage of the per-trial
+    # CIs (SRS t-interval / stratified collapsed pairs), per scheme
+    for scheme, cov in res.coverage.items():
+        _row(f"fig8_ci_coverage_{scheme}", round(float(np.mean(cov)), 3),
+             "mean empirical coverage of nominal 95% per-trial CIs")
     _row("fig8_time_s", round(time.time() - t0, 1))
+    results["coverage"] = {k: float(np.mean(v))
+                           for k, v in res.coverage.items()}
     return results
 
 

@@ -1,15 +1,22 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,value,derived`` CSV and a final claim-validation summary.
-``--quick`` trims Monte-Carlo trial counts (CI smoke).
+Prints ``name,value,derived`` CSV and a final claim-validation summary,
+and writes a machine-readable ``BENCH_results.json`` (per-bench timings
+and results + claim outcomes) so the perf trajectory is tracked across
+PRs. ``--quick`` trims Monte-Carlo trial counts (CI smoke).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import pathlib
 import sys
 import time
+
+RESULTS_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_results.json"
 
 
 def _force_devices(n: int) -> None:
@@ -24,7 +31,48 @@ def _force_devices(n: int) -> None:
     os.environ["XLA_FLAGS"] = f"{os.environ.get('XLA_FLAGS', '')} {flag}".strip()
 
 
+def _jsonable(obj):
+    """Conversion of bench results to STRICTLY valid JSON values.
+
+    NaN/±Inf (python floats, numpy scalars, and entries inside numpy
+    arrays) all become null — json.dumps would otherwise emit bare
+    ``NaN``/``Infinity`` tokens that strict parsers reject, defeating
+    the machine-readable ledger."""
+    import math
+
+    import numpy as np
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _jsonable(obj.tolist())
+    if isinstance(obj, np.generic):
+        return _jsonable(obj.item())
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+def write_results_json(benches: dict, claims: dict, ok: bool,
+                       errors: list, total_s: float,
+                       path: pathlib.Path = RESULTS_PATH) -> None:
+    """Dump the machine-readable run record (the cross-PR perf ledger)."""
+    payload = {
+        "benches": _jsonable(benches),
+        "claims": _jsonable(claims),
+        "overall_pass": bool(ok),
+        "errors": list(errors),
+        "total_seconds": round(total_s, 2),
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# results written to {path.name}")
+
+
 def main() -> None:
+    """CLI entry: run benches, validate claims, write BENCH_results.json."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
@@ -37,7 +85,8 @@ def main() -> None:
     if args.devices is not None:
         _force_devices(args.devices)
 
-    from . import kernels_bench, kmeans_batched_bench, paper_figs
+    from . import (estimators_bench, kernels_bench, kmeans_batched_bench,
+                   paper_figs)
 
     benches = {
         "fig1_cpi_distributions": paper_figs.bench_cpi_distributions,
@@ -55,6 +104,7 @@ def main() -> None:
         "beyond_isa_features": paper_figs.bench_isa_features,
         "kernels": kernels_bench.bench_kernels,
         "kmeans_batched": kmeans_batched_bench.bench_kmeans_batched,
+        "estimators": estimators_bench.bench_estimators,
     }
     if args.only:
         names = args.only.split(",")
@@ -66,23 +116,31 @@ def main() -> None:
 
     t0 = time.time()
     results = {}
+    bench_records = {}
     errors = []
     for name, fn in benches.items():
         print(f"# === {name} ===", flush=True)
+        tb = time.time()
         try:
             results[name] = fn()
+            bench_records[name] = {"seconds": round(time.time() - tb, 3),
+                                   "result": results[name]}
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
             results[name] = None
+            bench_records[name] = {"seconds": round(time.time() - tb, 3),
+                                   "error": f"{type(e).__name__}: {e}"}
             errors.append(name)
 
     # ------------------------------------------------ claim validation
     print("# === claim validation (paper vs reproduction) ===")
     ok = True
+    claims: dict[str, dict] = {}
 
     def check(name, cond, detail):
         nonlocal ok
         print(f"claim_{name},{'PASS' if cond else 'FAIL'},{detail}")
+        claims[name] = {"pass": bool(cond), "detail": detail}
         ok = ok and cond
 
     r5 = results.get("fig5_config_sweep")
@@ -124,12 +182,21 @@ def main() -> None:
         check("batched_assign_matches_oracle", rb["worst_agree"] > 0.999,
               f"worst batched-vs-oracle agreement {rb['worst_agree']:.4f}")
 
+    re_ = results.get("estimators")
+    if re_:
+        check("batched_estimators_match_scalar",
+              re_["max_rel_err"] <= 1e-6,
+              f"max rel err {re_['max_rel_err']:.2e} "
+              f"(batched {re_['speedup']:.0f}x faster than scalar loop)")
+
     # a bench that crashed is a failure even if no claim row references it
     check("no_bench_errors", not errors,
           "errors in: " + "|".join(errors) if errors else "all benches ran")
 
-    print(f"benchmarks_total_s,{time.time()-t0:.1f},")
+    total_s = time.time() - t0
+    print(f"benchmarks_total_s,{total_s:.1f},")
     print(f"benchmarks_overall,{'PASS' if ok else 'FAIL'},")
+    write_results_json(bench_records, claims, ok, errors, total_s)
     # CI contract: any FAILing claim-validation row (or bench error) must
     # make the process exit non-zero.
     sys.exit(0 if ok else 1)

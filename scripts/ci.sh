@@ -25,5 +25,12 @@ pip install -q -r requirements-dev.txt 2>/dev/null || true
 python scripts/check_docstrings.py
 python scripts/check_docs_links.py
 
+# estimator parity suite first (fast, no engine builds): batched
+# StratumTables estimators must match the scalar reference before the
+# full tier-1 run exercises everything built on them
+python -m pytest -x -q tests/test_estimator_tables.py
+
 python -m pytest -x -q
-python -m benchmarks.run --quick --only fig5_config_sweep,kernels,kmeans_batched
+# bench smoke; the `estimators` leg gates the batched-vs-scalar claim row
+# (benchmarks/run.py exits non-zero on any FAILing claim)
+python -m benchmarks.run --quick --only fig5_config_sweep,kernels,kmeans_batched,estimators

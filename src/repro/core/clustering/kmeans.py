@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Optional
 
 import jax
@@ -38,42 +37,19 @@ import jax.numpy as jnp
 import numpy as np
 
 
-class BackendFallbackWarning(UserWarning):
-    """Raised once per reason when a requested assignment backend falls
-    back to a different active backend."""
+# Backend policy is shared across kernels (repro.kernels.backend); the
+# historic import sites (`from repro.core.clustering.kmeans import
+# BackendFallbackWarning, resolve_backend, _reset_backend_warnings`)
+# keep working through these aliases.
+from repro.kernels.backend import (BackendFallbackWarning,  # noqa: F401
+                                   ResolvedBackend)
+from repro.kernels.backend import \
+    reset_backend_warnings as _reset_backend_warnings  # noqa: F401
+from repro.kernels.backend import resolve_backend as _resolve_shared
 
 
-@dataclasses.dataclass(frozen=True)
-class ResolvedBackend:
-    """Outcome of assignment-backend selection.
-
-    ``requested`` is the caller's ``backend=`` string; ``active`` is what
-    will actually run (``"jnp"``, ``"pallas"`` or ``"pallas_interpret"``);
-    ``reason`` explains any divergence (``None`` when served as asked).
-    """
-
-    requested: str
-    active: str
-    reason: Optional[str] = None
-
-
-_FALLBACK_WARNED: set[tuple[str, str]] = set()
-
-
-def _warn_fallback_once(requested: str, active: str, reason: str) -> None:
-    key = (requested, active)
-    if key in _FALLBACK_WARNED:
-        return
-    _FALLBACK_WARNED.add(key)
-    warnings.warn(
-        f"k-means assignment backend {requested!r} is not available as "
-        f"requested; using {active!r} instead ({reason})",
-        BackendFallbackWarning, stacklevel=3)
-
-
-def _reset_backend_warnings() -> None:
-    """Re-arm the one-time fallback warnings (test helper)."""
-    _FALLBACK_WARNED.clear()
+def _probe_kmeans_kernel() -> None:
+    from repro.kernels.kmeans_assign import ops as _ops  # noqa: F401
 
 
 def resolve_backend(requested: str) -> ResolvedBackend:
@@ -84,27 +60,13 @@ def resolve_backend(requested: str) -> ResolvedBackend:
     interpreter — correctness validation, not speed) on other platforms,
     and to ``"jnp"`` when the kernel package cannot be imported. Any
     fallback emits a one-time ``BackendFallbackWarning`` naming the
-    reason.
+    reason (shared policy: ``repro.kernels.backend``).
     """
-    if requested == "jnp":
-        return ResolvedBackend("jnp", "jnp")
-    if requested != "pallas":
+    if requested not in ("jnp", "pallas"):
         raise ValueError(f"unknown backend {requested!r}; "
                          "expected 'jnp' or 'pallas'")
-    try:
-        from repro.kernels.kmeans_assign import ops as _ops  # noqa: F401
-    except Exception as e:  # pragma: no cover - import is cheap and local
-        reason = (f"import of repro.kernels.kmeans_assign failed: "
-                  f"{type(e).__name__}: {e}")
-        _warn_fallback_once(requested, "jnp", reason)
-        return ResolvedBackend("pallas", "jnp", reason)
-    platform = jax.default_backend()
-    if platform != "tpu":
-        reason = (f"platform={platform!r} has no TPU; the Pallas kernel "
-                  "runs in interpret mode (correctness validation only)")
-        _warn_fallback_once(requested, "pallas_interpret", reason)
-        return ResolvedBackend("pallas", "pallas_interpret", reason)
-    return ResolvedBackend("pallas", "pallas")
+    return _resolve_shared(requested, kernel="k-means assignment",
+                           import_probe=_probe_kmeans_kernel)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,5 +1,11 @@
-"""Sampling estimators and designs (paper Appendix A + Fig. 14 flow)."""
+"""Sampling estimators and designs (paper Appendix A + Fig. 14 flow).
 
+The scalar estimators are one-lane views over the array-native engine in
+``tables`` (``StratumTables`` + batched lane-wise estimators); import
+``repro.core.sampling.tables`` directly for the batched API.
+"""
+
+from . import tables
 from .allocation import (neyman_allocation, proportional_allocation,
                          required_total_neyman, required_total_proportional)
 from .collapsed import collapsed_strata_estimate
@@ -12,11 +18,15 @@ from .stratified import (StratumSummary, satterthwaite_df,
                          stratified_estimate,
                          stratified_estimate_from_samples, stratified_mean,
                          stratified_variance, summarize_strata)
+from .tables import StratumTables, stratum_tables, tables_from_summaries
 from .two_phase import phase2_sizes_for_margin, two_phase_estimate
-from .types import Estimate, critical_value
+from .types import (Estimate, apply_coverage_contract, critical_value,
+                    critical_values)
 
 __all__ = [
-    "Estimate", "critical_value", "StratumSummary",
+    "Estimate", "critical_value", "critical_values",
+    "apply_coverage_contract", "StratumSummary",
+    "StratumTables", "stratum_tables", "tables_from_summaries", "tables",
     "srs_estimate", "srs_required_n", "draw_srs",
     "summarize_strata", "stratified_mean", "stratified_variance",
     "stratified_estimate", "stratified_estimate_from_samples",

@@ -10,15 +10,19 @@ from typing import Sequence
 
 import numpy as np
 
+from . import tables as _tables
 from .types import critical_value
 
 
 def proportional_allocation(weights: Sequence[float], n_total: int) -> np.ndarray:
-    """n_h proportional to W_h, each stratum >= 2 (so s_h^2 is estimable)."""
+    """n_h proportional to W_h, each stratum >= 2 (so s_h^2 is estimable).
+
+    One-lane view over ``tables.proportional_allocation`` (the batched
+    largest-remainder rule; minima overshoot is accepted — correctness
+    beats hitting the budget exactly).
+    """
     w = np.asarray(weights, dtype=np.float64)
-    raw = w * n_total
-    n_h = np.maximum(np.floor(raw).astype(int), 2)
-    return _largest_remainder_fixup(n_h, raw, n_total)
+    return np.asarray(_tables.proportional_allocation(w, int(n_total)))
 
 
 def neyman_allocation(
@@ -28,28 +32,15 @@ def neyman_allocation(
     *,
     min_per_stratum: int = 2,
 ) -> np.ndarray:
-    """n_h proportional to W_h * S_h (optimal for fixed total n)."""
+    """n_h proportional to W_h * S_h (optimal for fixed total n).
+
+    One-lane view over ``tables.neyman_allocation`` (zero W·S products
+    fall back to proportional allocation).
+    """
     w = np.asarray(weights, dtype=np.float64)
     s = np.asarray(stds, dtype=np.float64)
-    prod = w * np.maximum(s, 0.0)
-    if prod.sum() == 0.0:
-        return proportional_allocation(weights, n_total)
-    raw = prod / prod.sum() * n_total
-    n_h = np.maximum(np.floor(raw).astype(int), min_per_stratum)
-    return _largest_remainder_fixup(n_h, raw, n_total)
-
-
-def _largest_remainder_fixup(n_h: np.ndarray, raw: np.ndarray, n_total: int) -> np.ndarray:
-    """Adjust rounded allocation so sum(n_h) == max(n_total, minima sum)."""
-    n_h = n_h.copy()
-    deficit = n_total - int(n_h.sum())
-    if deficit > 0:
-        order = np.argsort(-(raw - np.floor(raw)))
-        for i in range(deficit):
-            n_h[order[i % len(order)]] += 1
-    # If minima pushed us above n_total we accept the overshoot: correctness
-    # (estimable variances) beats hitting the budget exactly.
-    return n_h
+    return np.asarray(_tables.neyman_allocation(
+        w, s, int(n_total), min_per_stratum=min_per_stratum))
 
 
 def required_total_neyman(

@@ -9,6 +9,10 @@ pairs strata expected to be similar and uses (paper eq. 4):
 Pairs are formed from *neighboring* strata after ordering by an auxiliary
 value (the paper orders by Config-0 stratum CPI). Degrees of freedom:
 df = L - J with J collapsed groups ([18]); pairwise collapsing gives L/2.
+
+The scalar estimator here is a one-lane view over
+``tables.collapsed_pairs_variance`` — the batched form the Monte-Carlo
+trial engine evaluates for every (app, trial) lane in one program.
 """
 
 from __future__ import annotations
@@ -17,7 +21,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .types import Estimate
+from . import tables as _tables
+from .types import Estimate, apply_coverage_contract
 
 
 def collapsed_strata_estimate(
@@ -26,6 +31,7 @@ def collapsed_strata_estimate(
     *,
     order_by: Optional[Sequence[float]] = None,
     confidence: float = 0.95,
+    strict: bool = False,
 ) -> Estimate:
     """CI for a one-unit-per-stratum design via pairwise collapsed strata.
 
@@ -35,12 +41,16 @@ def collapsed_strata_estimate(
       pairing neighbours (e.g. baseline-config stratum mean CPI). Defaults
       to the sampled values themselves.
 
-    Variance uses the standard collapsed-strata estimator
-        v(ybar) = sum_pairs (W_g1 y_g1 - W_g2 y_g2 ... ) — we use the
-    Cochran form with per-unit variances from eq. (4) plugged into the
-    stratified formula: v = sum_h W_h^2 s_h^2 / 1.
-    With an odd number of strata the last *three* strata form one group and
-    the group variance is the sample variance of its members.
+    Variance uses the Cochran form with per-unit variances from eq. (4)
+    plugged into the stratified formula: v = sum_h W_h^2 s_h^2 / 1.
+    With an odd number of strata the last *three* strata form one group
+    and the group variance is the sample variance of its members.
+
+    Strata whose sampled value is missing (NaN — an empty stratum in a
+    deterministic selection) follow the package coverage contract
+    (docs/statistics.md): they are dropped from the estimate and the
+    pairing, the mean is renormalized by the covered weight, and a
+    ``UserWarning`` names the bias — ``strict=True`` raises instead.
     """
     y = np.asarray(y_per_stratum, dtype=np.float64)
     w = np.asarray(weights, dtype=np.float64)
@@ -55,35 +65,34 @@ def collapsed_strata_estimate(
     key = np.asarray(order_by, dtype=np.float64) if order_by is not None else y
     if key.shape[0] != L:
         raise ValueError("order_by must have one value per stratum")
-    order = np.argsort(key, kind="stable")
 
-    mean = float((w * y).sum())
+    valid = np.isfinite(y)
+    covered = float(w[valid].sum())
+    frac = apply_coverage_contract(
+        covered, float(w.sum()), strict=strict,
+        empty_msg="every stratum value is missing; no units to "
+                  "estimate from",
+        what="strata with sampled values")
+    if frac <= 0.0:
+        return Estimate(mean=float("nan"), variance=float("nan"), n=0,
+                        df=None, confidence=confidence,
+                        scheme="collapsed_strata")
+    v_cnt = int(valid.sum())
+    if v_cnt < 2:
+        raise ValueError("need at least two sampled strata to collapse")
 
-    # Group neighbouring strata pairwise; odd L puts the final stratum into
-    # the last group (a 3-stratum group).
-    groups: list[np.ndarray] = []
-    i = 0
-    while i + 1 < L:
-        if i + 3 == L:  # final group of three
-            groups.append(order[i:i + 3])
-            i += 3
-        else:
-            groups.append(order[i:i + 2])
-            i += 2
-
-    var = 0.0
-    for g in groups:
-        if len(g) == 2:
-            h1, h2 = g
-            s2 = (y[h1] - y[h2]) ** 2 / 4.0   # eq. (4)
-            var += (w[h1] ** 2) * s2 + (w[h2] ** 2) * s2
-        else:
-            vals = y[g]
-            s2 = float(vals.var(ddof=1))
-            for h in g:
-                var += (w[h] ** 2) * s2
-
-    J = len(groups)
-    df = float(max(L - J, 1))   # [18]; pairwise collapsing => df = L/2
-    return Estimate(mean=mean, variance=var, n=L, df=df,
-                    confidence=confidence, scheme="collapsed_strata")
+    # valid strata first, in key order (the batched engine's layout)
+    order = np.argsort(np.where(valid, key, np.inf), kind="stable")
+    y_s, w_s = y[order], w[order]
+    mean = float((w_s[:v_cnt] * y_s[:v_cnt]).sum())
+    if v_cnt < L:                      # renormalize only under partial coverage
+        mean /= covered
+        # the variance must renormalize consistently (W_h -> W_h/covered,
+        # so each pair term scales by 1/covered²) or the CI is too narrow
+        # for the renormalized estimate it brackets
+        w_s = w_s / covered
+    var, df = _tables.collapsed_pairs_variance(y_s, w_s, v_cnt,
+                                               num_strata=L)
+    return Estimate(mean=mean, variance=float(var), n=v_cnt,
+                    df=float(max(df, 1.0)), confidence=confidence,
+                    scheme="collapsed_strata")

@@ -26,7 +26,7 @@ from .collapsed import collapsed_strata_estimate
 from .selection import (select_centroid, select_mean, select_random,
                         weighted_point_estimate)
 from .srs import draw_srs, srs_estimate
-from .stratified import summarize_strata
+from .stratified import StratumSummary
 from .two_phase import two_phase_estimate
 from .types import Estimate
 
@@ -193,41 +193,37 @@ class TwoPhaseFlow:
         Strata whose phase-1 pool yields fewer than 2 sampled units cannot
         provide a within-stratum variance; they are collapsed into the
         neighboring stratum in baseline-CPI order (the paper fn.7 remedy)
-        instead of crashing the variance formula.
+        instead of crashing the variance formula — one-lane view over
+        ``tables.collapse_small_strata`` (the same merge the batched
+        estimators apply lane-wise).
         """
+        from . import tables as _tables
+
         rng = np.random.default_rng(seed)
-        sampled: list[np.ndarray] = []
+        ys: list[np.ndarray] = []
+        labs: list[np.ndarray] = []
         for h in range(strat.num_strata):
             pool = strat.phase1_indices[strat.labels == h]
             k = int(min(per_stratum_sizes[h], pool.size))
             if k == 0:
-                sampled.append(np.empty(0))
                 continue
             chosen = rng.choice(pool, size=k, replace=False)
-            sampled.append(np.asarray(measure(chosen)))
-        # collapse under-sampled strata into their CPI-order neighbor
-        order = np.argsort(strat.stratum_order_key())
-        groups: list[tuple[list[np.ndarray], float]] = []
-        for h in order:
-            if strat.weights[h] == 0.0 and sampled[h].size == 0:
-                continue
-            groups.append(([sampled[h]], float(strat.weights[h])))
-        g = 0
-        while g < len(groups):
-            if sum(a.size for a in groups[g][0]) >= 2 or len(groups) == 1:
-                g += 1
-                continue
-            into = g - 1 if g > 0 else g + 1
-            groups[into] = (groups[into][0] + groups[g][0],
-                            groups[into][1] + groups[g][1])
-            del groups[g]
-            g = max(g - 1, 0)
-        if len(groups) == 1 and sum(a.size for a in groups[0][0]) < 2:
+            ys.append(np.asarray(measure(chosen)))
+            labs.append(np.full(k, h))
+        y = np.concatenate(ys) if ys else np.empty(0)
+        lab = np.concatenate(labs) if labs else np.empty(0, np.int64)
+        t = _tables.stratum_tables(y, lab, weights=strat.weights,
+                                   num_strata=strat.num_strata)
+        merged, _, n_groups = _tables.collapse_small_strata(
+            t, strat.stratum_order_key())
+        if int(n_groups) < 1:
             raise ValueError("ci_check needs at least 2 sampled units")
-        y = np.concatenate([a for ys, _ in groups for a in ys])
-        lab = np.concatenate([np.full(sum(a.size for a in ys), gi)
-                              for gi, (ys, _) in enumerate(groups)])
-        weights = np.array([w for _, w in groups])
-        summaries = summarize_strata(y, lab, weights=weights)
-        return two_phase_estimate(summaries, phase1_n=strat.phase1_indices.size,
+        summaries = [
+            StratumSummary(weight=float(merged.weights[g]),
+                           n=int(merged.counts[g]),
+                           mean=float(merged.means[g]),
+                           var=float(merged.variances[g]))
+            for g in range(int(n_groups))]
+        return two_phase_estimate(summaries,
+                                  phase1_n=strat.phase1_indices.size,
                                   confidence=confidence)

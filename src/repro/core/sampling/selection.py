@@ -10,10 +10,11 @@ serve as conservative bounds (paper Section III).
 
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
 import numpy as np
+
+from .types import apply_coverage_contract
 
 
 def select_random(
@@ -103,7 +104,9 @@ def weighted_point_estimate(
     When strata with positive weight have no selected units, the estimate
     is renormalized by the covered weight — which silently *biases* it
     toward the covered strata. With ``strict=True`` that condition raises;
-    by default it emits a ``UserWarning`` so callers can no longer miss it.
+    by default it emits a ``UserWarning`` so callers can no longer miss it
+    (the package-wide coverage contract — ``types.apply_coverage_contract``,
+    documented in docs/statistics.md).
     """
     mean = 0.0
     total_w = 0.0
@@ -112,14 +115,8 @@ def weighted_point_estimate(
             continue
         mean += weights[h] * float(y[idx].mean())
         total_w += weights[h]
-    if total_w <= 0:
-        raise ValueError("no strata selected")
-    covered = total_w / float(np.sum(weights))
-    if covered < 1.0 - 1e-6:
-        msg = (f"selected units cover only {covered:.4f} of the stratum "
-               "weight; renormalizing biases the estimate toward the "
-               "covered strata")
-        if strict:
-            raise ValueError(msg)
-        warnings.warn(msg, UserWarning, stacklevel=2)
+    apply_coverage_contract(
+        total_w, float(np.sum(weights)), strict=strict,
+        empty_action="raise", empty_msg="no strata selected",
+        what="selected units")
     return mean / total_w

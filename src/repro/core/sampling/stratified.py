@@ -7,6 +7,13 @@ Estimators (paper eq. 3):
 Degrees of freedom: z when every stratum sample is large or L is large
 (Lohr Sec. 4.2); otherwise Satterthwaite (eq. from [30]) or the rule of
 thumb df = n - L ([31]).
+
+These scalar functions are thin one-lane views over the array-native
+engine in ``tables.py`` (``StratumTables`` + batched estimators): the
+same code computes a single design here and a ``(..., L)`` stack of
+designs inside the Monte-Carlo/sweep programs. The scalar views keep the
+historic *strict* contract — degenerate strata raise — while the batched
+functions produce NaN lane-wise (see ``docs/statistics.md``).
 """
 
 from __future__ import annotations
@@ -15,6 +22,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from . import tables as _tables
 from .types import Estimate, StratumSummary, as_float_array
 
 
@@ -36,59 +44,38 @@ def summarize_strata(
     With ``num_strata=None``, L comes from ``len(weights)`` when weights are
     given (trailing strata may legitimately have no sampled units); only
     when both are omitted is L inferred from the observed labels.
+
+    One-lane view: the sufficient statistics come from
+    ``tables.stratum_tables`` (float64 host path).
     """
     yv = as_float_array(y)
     sv = np.asarray(strata)
     if yv.shape[0] != sv.shape[0]:
         raise ValueError("y and strata must align")
-    if num_strata is not None:
-        L = int(num_strata)
-    elif weights is not None:
-        L = len(weights)
-    else:
-        L = int(sv.max() + 1) if sv.size else 0
-    if weights is None:
-        counts = np.bincount(sv, minlength=L).astype(np.float64)
-        weights = counts / max(counts.sum(), 1.0)
-    w = np.asarray(weights, dtype=np.float64)
-    if w.shape[0] != L:
-        raise ValueError(f"weights length {w.shape[0]} != num strata {L}")
-    total_w = w.sum()
-    if not np.isclose(total_w, 1.0, atol=1e-6):
-        raise ValueError(f"stratum weights sum to {total_w}, expected 1")
-
+    t = _tables.stratum_tables(yv, sv, weights=weights,
+                               num_strata=num_strata)
+    means, variances = t.means, t.variances
     out: list[StratumSummary] = []
-    for h in range(L):
-        mask = sv == h
-        n_h = int(mask.sum())
-        if n_h == 0:
-            out.append(StratumSummary(weight=float(w[h]), n=0,
-                                      mean=float("nan"), var=float("nan")))
-        elif n_h == 1:
-            out.append(StratumSummary(weight=float(w[h]), n=1,
-                                      mean=float(yv[mask][0]), var=float("nan")))
-        else:
-            vals = yv[mask]
-            out.append(StratumSummary(weight=float(w[h]), n=n_h,
-                                      mean=float(vals.mean()),
-                                      var=float(vals.var(ddof=1))))
+    for h in range(t.num_strata):
+        n_h = int(t.counts[h])
+        out.append(StratumSummary(
+            weight=float(t.weights[h]), n=n_h,
+            mean=float(means[h]) if n_h > 0 else float("nan"),
+            var=float(variances[h]) if n_h > 1 else float("nan")))
     return out
 
 
 def stratified_mean(summaries: Sequence[StratumSummary]) -> float:
     """ybar_st = sum_h W_h ybar_h. Empty strata (n=0) are an error."""
-    mean = 0.0
     for s in summaries:
         if s.n == 0 and s.weight > 0:
             raise ValueError("stratum with positive weight has no sampled units")
-        if s.n > 0:
-            mean += s.weight * s.mean
-    return mean
+    t = _tables.tables_from_summaries(summaries)
+    return float(_tables.stratified_mean(t, renormalize=False))
 
 
 def stratified_variance(summaries: Sequence[StratumSummary]) -> float:
     """v(ybar_st) = sum_h W_h^2 s_h^2 / n_h. Requires n_h >= 2 everywhere."""
-    v = 0.0
     for s in summaries:
         if s.weight == 0.0:
             continue
@@ -96,23 +83,14 @@ def stratified_variance(summaries: Sequence[StratumSummary]) -> float:
             raise ValueError(
                 "within-stratum variance needs n_h >= 2 (paper fn.7); "
                 "use collapsed strata for one-unit-per-stratum designs")
-        v += (s.weight ** 2) * s.var / s.n
-    return v
+    t = _tables.tables_from_summaries(summaries)
+    return float(_tables.stratified_variance(t, renormalize=False))
 
 
 def satterthwaite_df(summaries: Sequence[StratumSummary]) -> float:
     """Satterthwaite [30] effective degrees of freedom for ybar_st."""
-    num = 0.0
-    den = 0.0
-    for s in summaries:
-        if s.n < 2 or s.weight == 0.0:
-            continue
-        g = (s.weight ** 2) * s.var / s.n
-        num += g
-        den += g * g / (s.n - 1)
-    if den == 0.0:
-        return float("inf")
-    return num * num / den
+    t = _tables.tables_from_summaries(summaries)
+    return float(_tables.satterthwaite_df(t))
 
 
 def stratified_estimate(
@@ -152,5 +130,6 @@ def stratified_estimate_from_samples(
     confidence: float = 0.95,
     df_method: str = "satterthwaite",
 ) -> Estimate:
+    """``summarize_strata`` + ``stratified_estimate`` in one call."""
     summaries = summarize_strata(y, strata, weights=weights, num_strata=num_strata)
     return stratified_estimate(summaries, confidence=confidence, df_method=df_method)

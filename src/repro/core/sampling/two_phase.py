@@ -17,13 +17,14 @@ only stratum weights (shaped by phase 1) and phase-2 data enter.
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Sequence
 
 import numpy as np
 
-from .stratified import (StratumSummary, satterthwaite_df, stratified_mean,
-                         stratified_variance)
-from .types import Estimate
+from . import tables as _tables
+from .stratified import StratumSummary
+from .types import Estimate, apply_coverage_contract
 
 
 def two_phase_estimate(
@@ -33,6 +34,7 @@ def two_phase_estimate(
     phase1_var: Optional[float] = None,
     confidence: float = 0.95,
     formula: str = "phase2_only",
+    strict: bool = False,
 ) -> Estimate:
     """Two-phase mean + CI from phase-2 per-stratum summaries.
 
@@ -40,28 +42,42 @@ def two_phase_estimate(
     phase-1 population variance estimate s^2 of *y*, only available when the
     phase-1 study variable matches). ``formula="phase2_only"`` uses eq. (6),
     the form the paper recommends for re-use across configurations.
+
+    One-lane view over ``tables.two_phase_variance``, following the
+    package-wide coverage contract (docs/statistics.md): positive-weight
+    strata with no sampled units warn and renormalize the estimate by the
+    covered weight (``strict=True`` raises); covered strata with n_h < 2
+    warn and yield a NaN variance (``strict=True`` raises) — the point
+    estimate stays finite either way.
     """
     if phase1_n < 1:
         raise ValueError("phase-1 sample size must be >= 1")
-    mean = stratified_mean(summaries)
-    v_phase2 = stratified_variance(summaries)
+    t = _tables.tables_from_summaries(summaries)
+    covered = float(_tables.covered_weight(t))
+    total = float(_tables.total_weight(t))
+    frac = apply_coverage_contract(
+        covered, total, strict=strict,
+        empty_msg="every stratum is empty; no units to estimate from",
+        what="sampled strata")
+    if frac <= 0.0:
+        return Estimate(mean=float("nan"), variance=float("nan"),
+                        n=0, df=None, confidence=confidence,
+                        scheme=f"two_phase[{formula}]")
 
-    if formula == "with_phase1_var":
-        if phase1_var is None:
-            raise ValueError("eq. (5) needs phase1_var")
-        v_phase1 = float(phase1_var) / phase1_n
-    elif formula == "phase2_only":
-        between = 0.0
-        for s in summaries:
-            if s.n > 0:
-                between += s.weight * (s.mean - mean) ** 2
-        v_phase1 = between / phase1_n
-    else:
-        raise ValueError(f"unknown formula {formula!r}")
+    mean = float(_tables.stratified_mean(t))
+    degenerate = bool(((t.counts > 0) & (t.weights > 0)
+                       & (t.counts < 2)).any())
+    if degenerate:
+        msg = ("within-stratum variance needs n_h >= 2 (paper fn.7); "
+               "use collapsed strata for one-unit-per-stratum designs")
+        if strict:
+            raise ValueError(msg)
+        warnings.warn(msg, UserWarning, stacklevel=2)
+    var = float(_tables.two_phase_variance(
+        t, phase1_n, formula=formula, phase1_var=phase1_var))
 
-    var = v_phase1 + v_phase2
     n = sum(s.n for s in summaries)
-    df = satterthwaite_df(summaries)
+    df = float(_tables.satterthwaite_df(t))
     if not np.isfinite(df):
         df = None
     return Estimate(mean=mean, variance=var, n=n, df=df,

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -29,6 +30,57 @@ def critical_value(confidence: float, df: Optional[float]) -> float:
         return float(_scipy_stats.norm.ppf(1.0 - alpha / 2.0))
     df = max(float(df), 1.0)
     return float(_scipy_stats.t.ppf(1.0 - alpha / 2.0, df))
+
+
+def critical_values(confidence: float, dfs) -> np.ndarray:
+    """Vectorized ``critical_value``: z-/t- critical values for an array
+    of degrees of freedom (host-side scipy — not jit-able).
+
+    ``inf``, NaN or very large (≥ 1e6) entries select the normal
+    approximation; finite entries are clamped to ≥ 1 (matching the scalar
+    rule). The batched estimator paths compute per-lane dfs on device and
+    look critical values up here once per program, outside ``jit``.
+    """
+    alpha = 1.0 - confidence
+    d = np.asarray(dfs, np.float64)
+    z = float(_scipy_stats.norm.ppf(1.0 - alpha / 2.0))
+    use_z = ~np.isfinite(d) | (d >= 1e6)
+    out = np.where(
+        use_z, z,
+        _scipy_stats.t.ppf(1.0 - alpha / 2.0,
+                           np.maximum(np.where(use_z, 1.0, d), 1.0)))
+    return out
+
+
+def apply_coverage_contract(covered: float, total: float, *,
+                            strict: bool = False,
+                            empty_action: str = "nan",
+                            empty_msg: str = "no strata have sampled units",
+                            what: str = "selected units",
+                            stacklevel: int = 3) -> float:
+    """The package-wide NaN/warn/raise coverage contract (docs/statistics.md).
+
+    ``covered``/``total``: stratum weight with / without sampled units.
+    Returns the covered fraction for renormalization (0.0 when nothing is
+    covered — callers then produce NaN results). Nothing covered raises
+    ``ValueError(empty_msg)`` when ``empty_action="raise"`` or
+    ``strict=True``, else warns. Partial coverage warns by default
+    (renormalizing silently biases the estimate toward the covered
+    strata) and raises under ``strict=True``. Full coverage is silent.
+    """
+    if covered <= 0.0 or total <= 0.0:
+        if strict or empty_action == "raise":
+            raise ValueError(empty_msg)
+        warnings.warn(empty_msg, UserWarning, stacklevel=stacklevel)
+        return 0.0
+    frac = covered / total
+    if frac < 1.0 - 1e-6:
+        msg = (f"{what} cover only {frac:.4f} of the stratum weight; "
+               "renormalizing biases the estimate toward the covered strata")
+        if strict:
+            raise ValueError(msg)
+        warnings.warn(msg, UserWarning, stacklevel=stacklevel)
+    return frac
 
 
 @dataclasses.dataclass(frozen=True)

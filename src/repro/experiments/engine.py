@@ -161,19 +161,43 @@ class SweepStack:
         return self.feats[np.arange(len(self.names))[:, None], idx]
 
 
+def _segment_sums_counts(labels: np.ndarray, valid: np.ndarray,
+                         num_strata: int, values: np.ndarray
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """(A, L) per-stratum value sums AND counts over valid entries, from
+    ONE batched ``segment_stats`` dispatch (the Pallas kernel on TPU, the
+    jnp oracle elsewhere — ``repro.kernels.segment_stats``).
+
+    This is the engine's stratum-summary hot path: every build/selection
+    summarization (stratum weights, centroid targets, gather tables)
+    routes through the same kernel contract the estimator tables use.
+    The kernel contract accumulates in float32 (identical on and off
+    TPU): counts are exact below 2^24 per stratum, and value sums carry
+    ~1e-7 relative rounding — selection keys built from them (dg
+    centroids, mean-policy targets, CI ordering keys) are f32-stable by
+    design, not bit-equal to a float64 bincount.
+    """
+    from ..kernels.segment_stats.ops import segment_stats
+
+    lab = np.where(valid, labels, -1).astype(np.int32)
+    sums, _, counts = segment_stats(np.asarray(values, np.float32), lab,
+                                    num_strata)
+    return (np.asarray(sums[..., 0], np.float64),
+            np.asarray(counts, np.float64))
+
+
 def _offset_bincount(labels: np.ndarray, valid: np.ndarray,
                      num_strata: int, weights=None) -> np.ndarray:
     """(A, L) per-app stratum counts — or weighted sums — over valid
-    entries, no host loop."""
-    a_n = labels.shape[0]
-    off = labels + num_strata * np.arange(a_n)[:, None]
-    return np.bincount(
-        off[valid].ravel(),
-        weights=None if weights is None else weights[valid].ravel(),
-        minlength=a_n * num_strata).reshape(a_n, num_strata)
+    entries (one ``_segment_sums_counts`` dispatch)."""
+    if weights is None:
+        return _segment_sums_counts(labels, valid, num_strata,
+                                    np.ones(labels.shape, np.float32))[1]
+    return _segment_sums_counts(labels, valid, num_strata, weights)[0]
 
 
-def stratum_tables(labels: np.ndarray, valid: np.ndarray, num_strata: int
+def stratum_tables(labels: np.ndarray, valid: np.ndarray, num_strata: int,
+                   counts: Optional[np.ndarray] = None
                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Per-stratum gather tables for an (A, n) label stack.
 
@@ -181,10 +205,14 @@ def stratum_tables(labels: np.ndarray, valid: np.ndarray, num_strata: int
     positions ``order[a, offsets[a, h] : offsets[a, h] + counts[a, h]]``,
     in index order (invalid entries sort last). Shared by vectorized
     selection and the Monte-Carlo trial engine so draw indexing can never
-    drift between the two. NOTE: for trailing empty strata ``offsets``
+    drift between the two. Callers that already hold the stratum counts
+    from a ``_segment_sums_counts`` dispatch pass them via ``counts`` to
+    avoid a second dispatch. NOTE: for trailing empty strata ``offsets``
     equals the row width — gathers must clamp (empty strata are masked
     out of every consumer anyway)."""
-    counts = _offset_bincount(labels, valid, num_strata)
+    if counts is None:
+        counts = _offset_bincount(labels, valid, num_strata)
+    counts = np.asarray(counts).astype(np.int64)
     order = np.argsort(np.where(valid, labels, num_strata), axis=1,
                        kind="stable")
     offsets = np.cumsum(counts, axis=1) - counts
@@ -394,16 +422,19 @@ def scheme_selection_bank(
             cents = np.stack([e.rfv_centroids for e in exps])
         else:
             feats = baseline[:, :, None]
-            # per-stratum mean baseline CPI; EMPTY strata get a zero
-            # centroid but are masked out of selection below, so no NaN
-            # ever reaches a distance computation
-            counts = _offset_bincount(labels, lv, L)
-            sums = _offset_bincount(labels, lv, L, weights=baseline)
-            cents = (sums / np.maximum(counts, 1))[:, :, None]
     else:
         raise ValueError(f"unknown scheme {scheme!r}")
 
-    counts = _offset_bincount(labels, lv, L)
+    # ONE stratum-summary dispatch serves counts, the dg stratum-mean
+    # centroids AND the mean-policy targets
+    base_sums, countsf = _segment_sums_counts(labels, lv, L, baseline)
+    base_means = base_sums / np.maximum(countsf, 1)
+    counts = countsf.astype(np.int64)
+    if scheme == "dg":
+        # per-stratum mean baseline CPI; EMPTY strata get a zero
+        # centroid but are masked out of selection below, so no NaN
+        # ever reaches a distance computation
+        cents = base_means[:, :, None]
     member = (labels[:, :, None] == np.arange(L)[None, None, :]) \
         & lv[:, :, None]                                   # (A, n, L)
 
@@ -414,14 +445,12 @@ def scheme_selection_bank(
             "and,ald->anl", feats, cents) + c2[:, None, :]
         local = np.where(member, d2, np.inf).argmin(axis=1)
     elif policy == "mean":
-        sums = _offset_bincount(labels, lv, L, weights=baseline)
-        target = sums / np.maximum(counts, 1)
-        d = np.abs(baseline[:, :, None] - target[:, None, :])
+        d = np.abs(baseline[:, :, None] - base_means[:, None, :])
         local = np.where(member, d, np.inf).argmin(axis=1)
     elif policy == "random":
         rng = np.random.default_rng(seed)
         u = rng.random(counts.shape)                        # (A, L)
-        order, offsets, _ = stratum_tables(labels, lv, L)
+        order, offsets, _ = stratum_tables(labels, lv, L, counts=counts)
         pos = offsets + np.minimum((u * counts).astype(np.int64),
                                    np.maximum(counts - 1, 0))
         # trailing empty strata put offsets at the row width: clamp (the

@@ -9,6 +9,18 @@ device-parallel; the uniforms are drawn *outside* the sharded region from
 one PRNG key, so sharded and single-device runs use identical draws and
 produce identical estimates.
 
+The same one-dispatch-per-scheme program also evaluates a per-trial
+confidence interval (the Fig 8 → CI-claim bridge): the SRS scheme uses
+the eq. (2) t-interval, the one-unit-per-stratum schemes the pairwise
+collapsed-strata variance (eq. 4) over the occupied strata in
+baseline-CPI order — evaluated lane-wise by the batched estimators in
+``repro.core.sampling.tables``. ``TrialResult`` reports the absolute CI
+half-width per (app, trial) and the empirical coverage of the census
+truth per app; t critical values come from per-app static dfs, computed
+host-side once per scheme. The per-stratum order keys route through the
+``segment_stats`` kernel contract (one batched dispatch, jnp oracle
+off-TPU).
+
 Cost accounting matches the figure's semantics exactly: schemes drawing
 from census CPI (``random``, ``bbv``) are analysis-only and free; schemes
 drawing from the phase-1 sample (``rfv``, ``dg``) pull their value pool
@@ -25,6 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.sampling import tables as sampling_tables
+from ..core.sampling.types import critical_values
 from ..simcpu import APP_NAMES, stack_ragged
 from .engine import ExperimentEngine, stratum_tables
 
@@ -42,6 +56,7 @@ class TrialSpec:
     schemes: tuple[str, ...] = TRIAL_SCHEMES
     config_index: int = 6              # study config (paper: Config 6)
     seed: int = 7
+    confidence: float = 0.95           # per-trial CI level
 
     def __post_init__(self):
         unknown = set(self.schemes) - set(TRIAL_SCHEMES)
@@ -53,19 +68,32 @@ class TrialSpec:
 class TrialResult:
     """Per-scheme Monte-Carlo outcomes for one ``run_trials`` study.
 
-    ``estimates[scheme]`` / ``errors[scheme]`` are ``(A, T)`` arrays over
-    the (app, trial) axes: estimated mean CPI and percent |error| vs the
-    census truth at ``spec.config_index``.
+    ``estimates[scheme]`` / ``errors[scheme]`` / ``half_widths[scheme]``
+    are ``(A, T)`` arrays over the (app, trial) axes: estimated mean CPI,
+    percent |error| vs the census truth at ``spec.config_index``, and the
+    absolute CI half-width at ``spec.confidence``. ``coverage[scheme]``
+    is the ``(A,)`` empirical coverage — the fraction of trials whose CI
+    contains the truth (the paper's conservative-CI claim evaluated
+    empirically). SRS trials use the eq. (2) t-interval; stratified
+    one-unit-per-stratum trials the eq. (4) collapsed-pairs interval.
     """
 
     apps: tuple[str, ...]
     spec: TrialSpec
-    estimates: dict[str, np.ndarray]   # scheme -> (A, T) estimated mean CPI
-    errors: dict[str, np.ndarray]      # scheme -> (A, T) percent |error|
+    estimates: dict[str, np.ndarray]    # scheme -> (A, T) estimated mean CPI
+    errors: dict[str, np.ndarray]       # scheme -> (A, T) percent |error|
+    half_widths: dict[str, np.ndarray] = dataclasses.field(
+        default_factory=dict)           # scheme -> (A, T) abs CI half-width
+    coverage: dict[str, np.ndarray] = dataclasses.field(
+        default_factory=dict)           # scheme -> (A,) empirical coverage
 
     def p95(self, scheme: str) -> np.ndarray:
         """(A,) 95th-percentile |error| per app (the Fig 8 statistic)."""
         return np.percentile(self.errors[scheme], 95, axis=1)
+
+    def half_width_pct(self, scheme: str, truth: np.ndarray) -> np.ndarray:
+        """(A, T) CI half-widths as percent of the per-app truth."""
+        return 100.0 * self.half_widths[scheme] / np.asarray(truth)[:, None]
 
 
 def trial_key(spec: TrialSpec, scheme: str) -> jax.Array:
@@ -83,8 +111,9 @@ def trial_uniforms(spec: TrialSpec, scheme: str, num_apps: int,
         (num_apps, spec.trials, draws_per_trial), jnp.float32))
 
 
-def _srs_trials(u, pool, n_valid, truth):
-    """(A, T, n) uniforms x (A, N) value pool -> ((A, T) est, (A, T) err)."""
+def _srs_trials(u, pool, n_valid, truth, crit):
+    """(A, T, n) uniforms x (A, N) value pool -> per-trial estimate,
+    percent error, eq. (2) t-interval half-width, and coverage."""
     a, t, n = u.shape
     idx = jnp.minimum((u * n_valid[:, None, None]).astype(jnp.int32),
                       (n_valid - 1)[:, None, None].astype(jnp.int32))
@@ -93,12 +122,19 @@ def _srs_trials(u, pool, n_valid, truth):
         axis=2)
     est = vals.mean(axis=2)
     err = 100.0 * jnp.abs(est - truth[:, None]) / truth[:, None]
-    return est, err
+    ss = ((vals - est[:, :, None]) ** 2).sum(axis=2)
+    v_mean = jnp.where(n > 1, ss / max(n - 1, 1), jnp.nan) / n
+    half = crit[:, None] * jnp.sqrt(v_mean)
+    cover = (jnp.abs(est - truth[:, None]) <= half).mean(axis=1)
+    return est, err, half, cover
 
 
-def _stratified_trials(u, sorted_vals, offsets, counts, weights, truth):
+def _stratified_trials(u, sorted_vals, offsets, counts, weights, truth,
+                       key_order, w_sorted, n_occ, crit):
     """One unit per non-empty stratum per trial, weighted sum (the Fig 8
-    estimator: empty strata contribute nothing, no renormalization)."""
+    estimator: empty strata contribute nothing, no renormalization) —
+    plus the eq. (4) collapsed-pairs CI over occupied strata, evaluated
+    lane-wise by ``sampling_tables.collapsed_pairs_variance``."""
     a, t, l = u.shape
     pick = offsets[:, None, :] + jnp.minimum(
         (u * counts[:, None, :]).astype(jnp.int32),
@@ -112,7 +148,14 @@ def _stratified_trials(u, sorted_vals, offsets, counts, weights, truth):
     occupied = (counts > 0)[:, None, :]
     est = jnp.sum(vals * weights[:, None, :] * occupied, axis=2)
     err = 100.0 * jnp.abs(est - truth[:, None]) / truth[:, None]
-    return est, err
+    # collapsed-pairs CI: stratum draws gathered into key order
+    y_sorted = jnp.take_along_axis(
+        vals, jnp.broadcast_to(key_order[:, None, :], (a, t, l)), axis=2)
+    var, _ = sampling_tables.collapsed_pairs_variance(
+        y_sorted, w_sorted[:, None, :], n_occ[:, None], num_strata=l)
+    half = crit[:, None] * jnp.sqrt(var)
+    cover = (jnp.abs(est - truth[:, None]) <= half).mean(axis=1)
+    return est, err, half, cover
 
 
 _srs_trials_jit = jax.jit(_srs_trials)
@@ -126,6 +169,20 @@ def _dispatch(fn, fn_jit, mesh, *args):
     return app_sharded_cached(fn, mesh)(*args)
 
 
+def _stratum_key_counts(baseline: np.ndarray, labels: np.ndarray,
+                        valid: np.ndarray, num_strata: int
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """(A, L) per-stratum mean-baseline-CPI ordering key (+inf for empty
+    strata) AND the stratum counts, from the engine's ONE-dispatch
+    stratum-summary path (the ``segment_stats`` kernel contract) — the
+    counts feed ``stratum_tables`` so no second dispatch is needed."""
+    from .engine import _segment_sums_counts
+
+    sums, cnts = _segment_sums_counts(labels, valid, num_strata, baseline)
+    key = np.where(cnts > 0, sums / np.maximum(cnts, 1.0), np.inf)
+    return key, cnts
+
+
 def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
                apps: Optional[Sequence[str]] = None,
                mesh=None) -> TrialResult:
@@ -133,7 +190,8 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
 
     No host-side per-app or per-trial loops: each scheme is one vmapped
     (optionally app-sharded) dispatch over the (app, trial, stratum/unit)
-    axes.
+    axes — including the per-trial CI half-width and its empirical
+    coverage of the census truth (see ``TrialResult``).
     """
     apps = tuple(apps or APP_NAMES)
     exps = engine.build(apps)
@@ -156,16 +214,24 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
 
     estimates: dict[str, np.ndarray] = {}
     errors: dict[str, np.ndarray] = {}
+    halves: dict[str, np.ndarray] = {}
+    coverage: dict[str, np.ndarray] = {}
     for scheme in spec.schemes:
         if scheme == "random":
-            u = trial_uniforms(spec, scheme, len(apps), spec.units_per_trial)
-            est, err = _dispatch(_srs_trials, _srs_trials_jit, mesh,
-                                 u, census, stack.n_regions, truth)
+            n = spec.units_per_trial
+            dfs = np.full(len(apps), float(n - 1) if n < 30 else np.inf)
+            crit = critical_values(spec.confidence, dfs).astype(np.float32)
+            u = trial_uniforms(spec, scheme, len(apps), n)
+            est, err, half, cov = _dispatch(
+                _srs_trials, _srs_trials_jit, mesh,
+                u, census, stack.n_regions, truth, crit)
         else:
             if scheme == "bbv":
                 labels, lv = stack_ragged([e.bbv_labels for e in exps])
                 pool, weights = census, np.stack(
                     [e.bbv_weights for e in exps])
+                baseline, _ = stack_ragged([e.census(0) for e in exps],
+                                           dtype=np.float32)
             else:
                 labels, lv = stack_ragged(
                     [e.rfv_labels if scheme == "rfv" else e.dg_labels
@@ -174,14 +240,31 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
                 weights = np.stack(
                     [e.rfv_weights if scheme == "rfv" else e.dg_weights
                      for e in exps])
-            order, offsets, counts = stratum_tables(labels, lv, l_n)
+                baseline, _ = stack_ragged([e.cpi0_1 for e in exps],
+                                           dtype=np.float32)
+            # ONE stratum-summary dispatch serves the collapsed-pairs
+            # ordering key AND the gather-table counts
+            key, countsf = _stratum_key_counts(baseline, labels, lv, l_n)
+            order, offsets, counts = stratum_tables(labels, lv, l_n,
+                                                    counts=countsf)
             sorted_vals = np.take_along_axis(pool, order, axis=1)
+            # collapsed-pairs CI geometry: occupied strata first, in
+            # baseline-CPI key order (static per app)
+            key_order = np.argsort(key, axis=1, kind="stable")
+            w_sorted = np.take_along_axis(weights, key_order, axis=1)
+            n_occ = (counts > 0).sum(axis=1)
+            dfs = np.maximum(n_occ - n_occ // 2, 1).astype(np.float64)
+            crit = critical_values(spec.confidence, dfs).astype(np.float32)
             u = trial_uniforms(spec, scheme, len(apps), l_n)
-            est, err = _dispatch(
+            est, err, half, cov = _dispatch(
                 _stratified_trials, _stratified_trials_jit, mesh,
                 u, sorted_vals, offsets.astype(np.int32),
-                counts.astype(np.int32), weights.astype(np.float32), truth)
+                counts.astype(np.int32), weights.astype(np.float32), truth,
+                key_order.astype(np.int32), w_sorted.astype(np.float32),
+                n_occ.astype(np.int32), crit)
         estimates[scheme] = np.asarray(est)
         errors[scheme] = np.asarray(err)
+        halves[scheme] = np.asarray(half)
+        coverage[scheme] = np.asarray(cov)
     return TrialResult(apps=apps, spec=spec, estimates=estimates,
-                       errors=errors)
+                       errors=errors, half_widths=halves, coverage=coverage)

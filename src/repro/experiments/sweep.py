@@ -27,7 +27,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ..core.sampling.types import critical_value
+from ..core.sampling import tables as sampling_tables
+from ..core.sampling.types import critical_values
 from ..simcpu import APP_NAMES
 from .engine import ExperimentEngine, scheme_selection_bank
 
@@ -74,6 +75,8 @@ class SweepRow:
     n_units: int          # regions the estimate is built from
     margin_pct: Optional[float] = None   # 95% margin (srs scheme only)
     p95_err_pct: Optional[float] = None  # Monte-Carlo p95 |error| (trials)
+    ci_half_pct: Optional[float] = None  # Monte-Carlo mean CI half-width (%)
+    coverage: Optional[float] = None     # Monte-Carlo empirical CI coverage
 
 
 class ResultsTable:
@@ -111,32 +114,30 @@ class ResultsTable:
 
     def to_csv(self) -> str:
         """The table as CSV text (header + one line per row; optional
-        margin/p95 columns empty when absent)."""
+        margin/p95/CI columns empty when absent)."""
         hdr = ("app,scheme,config_index,estimate,truth,err_pct,n_units,"
-               "margin_pct,p95_err_pct")
+               "margin_pct,p95_err_pct,ci_half_pct,coverage")
         lines = [hdr]
         for r in self.rows:
             m = "" if r.margin_pct is None else f"{r.margin_pct:.4f}"
             p = "" if r.p95_err_pct is None else f"{r.p95_err_pct:.4f}"
+            h = "" if r.ci_half_pct is None else f"{r.ci_half_pct:.4f}"
+            c = "" if r.coverage is None else f"{r.coverage:.4f}"
             lines.append(f"{r.app},{r.scheme},{r.config_index},"
                          f"{r.estimate:.6f},{r.truth:.6f},{r.err_pct:.4f},"
-                         f"{r.n_units},{m},{p}")
+                         f"{r.n_units},{m},{p},{h},{c}")
         return "\n".join(lines)
 
 
 def _srs_stats(cpi: np.ndarray, valid: np.ndarray
                ) -> tuple[np.ndarray, np.ndarray]:
     """Vectorized ``srs_estimate`` over an (A, C, K) masked CPI stack:
-    returns (A, C) means and margins (percent)."""
-    x = cpi.astype(np.float64)
-    v = valid[:, None, :]
-    n = valid.sum(axis=1).astype(np.float64)[:, None]      # (A, 1)
-    mean = np.where(v, x, 0.0).sum(axis=2) / n
-    s2 = np.where(v, (x - mean[:, :, None]) ** 2, 0.0).sum(axis=2) \
-        / np.maximum(n - 1.0, 1.0)
-    crit = np.asarray([critical_value(0.95, nn - 1 if nn < 30 else None)
-                       for nn in n[:, 0]])
-    margin = crit[:, None] * np.sqrt(s2 / n)
+    returns (A, C) means and margins (percent) — one-call view over the
+    batched eq. (2) helper in ``repro.core.sampling.tables``."""
+    mean, v_mean, n = sampling_tables.masked_srs_stats(
+        cpi.astype(np.float64), valid[:, None, :])
+    crit = critical_values(0.95, np.where(n < 30, n - 1.0, np.inf))
+    margin = crit * np.sqrt(v_mean)
     return mean, 100.0 * margin / np.abs(mean)
 
 
@@ -179,7 +180,7 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
         margins = None
         n_units = valid.sum(axis=1)
 
-    p95 = None
+    p95 = ci_half = cov = None
     if spec.trials is not None:
         from .montecarlo import run_trials
         mc_scheme = "random" if spec.scheme == "srs" else spec.scheme
@@ -188,11 +189,17 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
                                             schemes=(mc_scheme,)),
                         apps=spec.apps, mesh=mesh)
         p95 = mc.p95(mc_scheme)
+        mc_truth = np.stack(
+            [e.truth[spec.trials.config_index] for e in exps])
+        ci_half = np.nanmean(mc.half_width_pct(mc_scheme, mc_truth), axis=1)
+        cov = mc.coverage[mc_scheme]
 
     rows: list[SweepRow] = []
     for a, name in enumerate(spec.apps):
         for pos, ci in enumerate(cfg_is):
             est, tr = float(ests[a, pos]), float(truth[a, pos])
+            at_trial_cfg = (spec.trials is not None
+                            and spec.trials.config_index == ci)
             rows.append(SweepRow(
                 app=name, scheme=spec.scheme, config_index=ci,
                 estimate=est, truth=tr,
@@ -200,7 +207,7 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
                 n_units=int(n_units[a]),
                 margin_pct=(float(margins[a, pos])
                             if margins is not None else None),
-                p95_err_pct=(float(p95[a])
-                             if p95 is not None
-                             and spec.trials.config_index == ci else None)))
+                p95_err_pct=float(p95[a]) if at_trial_cfg else None,
+                ci_half_pct=float(ci_half[a]) if at_trial_cfg else None,
+                coverage=float(cov[a]) if at_trial_cfg else None))
     return ResultsTable(rows)

@@ -1,47 +1,148 @@
-"""Jitted public wrapper for the segment-stats kernel."""
+"""Jitted public wrapper for the batch-native segment-stats kernel.
+
+ONE dispatch path for every input rank: ``(n,)`` / ``(n, d)`` single
+problems, ``(A, n)`` app stacks and ``(A, T, n)`` trial stacks all
+flatten their leading axes into the kernel's batch grid dimension — no
+vmap-of-``pallas_call`` anywhere. Mirrors the ``kmeans_assign``
+backend/dispatch-marker contract: ``resolve_backend`` picks the kernel
+on TPU and the jnp oracle elsewhere (``backend="auto"``, warning once),
+``backend="pallas"`` forces the kernel (interpret mode off-TPU), and
+``last_dispatch()`` exposes a trace-time marker describing the most
+recent kernel launch so tests can assert the batch-native path.
+"""
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..backend import ResolvedBackend, resolve_backend
+from .ref import segment_stats_ref
 from .segment_stats import BLOCK_N, segment_stats_padded
+
+# trace-time record of the most recent kernel dispatch (see last_dispatch)
+_last_dispatch: Optional[dict] = None
+
+
+def last_dispatch() -> Optional[dict]:
+    """Snapshot of the most recent ``segment_stats`` kernel dispatch.
+
+    Returns ``None`` if the kernel was never dispatched, else a dict with
+    ``batch`` (flattened leading-axes size fed to the batch grid axis),
+    ``batch_shape`` (the caller's leading axes, ``()`` for unbatched
+    input), ``n``/``k``/``d`` (logical problem shape), ``grid`` (kernel
+    launch geometry) and ``interpret``. Only the Pallas path writes the
+    record — jnp-oracle calls (the ``"auto"`` fallback off-TPU) leave it
+    untouched, so tests can tell the two paths apart.
+    """
+    return None if _last_dispatch is None else dict(_last_dispatch)
+
+
+def _reset_dispatch_record() -> None:
+    """Clear the dispatch marker (test helper)."""
+    global _last_dispatch
+    _last_dispatch = None
 
 
 def _round_up(v: int, m: int) -> int:
     return (v + m - 1) // m * m
 
 
-def segment_stats(x: jax.Array, labels: jax.Array, num_segments: int
+def _probe_kernel() -> None:
+    from . import segment_stats as _mod  # noqa: F401
+
+
+def resolve_segment_backend(requested: str) -> ResolvedBackend:
+    """``repro.kernels.backend.resolve_backend`` bound to this kernel."""
+    return resolve_backend(requested, kernel="segment_stats",
+                           import_probe=_probe_kernel)
+
+
+def segment_stats(x: jax.Array, labels: jax.Array, num_segments: int,
+                  *, backend: str = "auto"
                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Per-segment (sums, sumsq, counts). Pads n to BLOCK_N with label -1
-    rows (matching no segment) so padding contributes nothing."""
+    """Per-segment ``(sums, sumsq, counts)`` over any leading batch axes.
+
+    Args:
+      x: values — ``(n,)``, ``(n, d)``, or any leading batch axes:
+        ``(A, n)``, ``(A, T, n)``, ``(A, n, d)``, ... When ``x`` and
+        ``labels`` have the same shape a feature axis of size 1 is
+        appended (outputs keep it, matching the historic 1-D contract).
+      labels: int32 segment ids, shape = ``x`` minus the feature axis.
+        ``-1`` marks masked rows (padding) that contribute nothing.
+      num_segments: k, the static number of segments per lane.
+      backend: ``"auto"`` (kernel on TPU, jnp oracle elsewhere —
+        warning once), ``"pallas"`` (force the kernel; interpret mode
+        off-TPU) or ``"jnp"`` (force the oracle).
+
+    Returns:
+      ``(sums (..., k, d), sumsq (..., k, d), counts (..., k))`` float32.
+
+    The Pallas path pads n to ``BLOCK_N`` with label ``-1`` rows
+    (matching no segment, contributing nothing) and flattens every
+    leading axis into the kernel's ``(batch, n_tiles)`` grid — one
+    dispatch regardless of rank.
+    """
     x = jnp.asarray(x, jnp.float32)
     labels = jnp.asarray(labels, jnp.int32)
-    if x.ndim == 1:
-        x = x[:, None]
-    n, d = x.shape
-    if labels.shape != (n,):
-        raise ValueError(f"labels shape {labels.shape} != ({n},)")
+    if x.shape == labels.shape:
+        x = x[..., None]
+    if x.shape[:-1] != labels.shape:
+        raise ValueError(f"labels shape {labels.shape} does not match "
+                         f"x shape {x.shape} (need x = labels shape + (d,))")
+
+    active = resolve_segment_backend(backend).active
+    if active == "jnp":
+        return segment_stats_ref(x, labels, num_segments)
+
+    # masked/out-of-range rows must contribute NOTHING even when their
+    # values are NaN/inf: the one-hot matmul would otherwise turn
+    # 0 * NaN into NaN and poison every segment of the lane
+    dead = (labels < 0) | (labels >= num_segments)
+    x = jnp.where(dead[..., None], 0.0, x)
+
+    batch_shape = labels.shape[:-1]
+    n = labels.shape[-1]
+    d = x.shape[-1]
+    b = 1
+    for s in batch_shape:
+        b *= s
     n_p = _round_up(max(n, 1), BLOCK_N)
-    x_p = jnp.zeros((n_p, d), jnp.float32).at[:n].set(x)
-    lab_p = jnp.full((n_p, 1), -1, jnp.int32).at[:n, 0].set(labels)
-    interpret = jax.default_backend() != "tpu"
-    return segment_stats_padded(x_p, lab_p, num_segments, interpret=interpret)
+    x_p = jnp.zeros((b, n_p, d), jnp.float32).at[:, :n].set(
+        x.reshape(b, n, d))
+    lab_p = jnp.full((b, n_p, 1), -1, jnp.int32).at[:, :n, 0].set(
+        labels.reshape(b, n))
+    interpret = active == "pallas_interpret"
+    global _last_dispatch
+    _last_dispatch = {
+        "batch": b, "batch_shape": batch_shape, "n": n,
+        "k": num_segments, "d": d, "grid": (b, n_p // BLOCK_N),
+        "interpret": interpret,
+    }
+    sums, sumsq, counts = segment_stats_padded(
+        x_p, lab_p, num_segments, interpret=interpret)
+    return (sums.reshape(*batch_shape, num_segments, d),
+            sumsq.reshape(*batch_shape, num_segments, d),
+            counts.reshape(*batch_shape, num_segments))
 
 
-def stratum_moments(x: jax.Array, labels: jax.Array, num_segments: int
+def stratum_moments(x: jax.Array, labels: jax.Array, num_segments: int,
+                    *, backend: str = "auto"
                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """(means, sample variances, counts) per stratum from the kernel stats.
 
-    Variance uses the n-1 denominator (matches eq. 2); strata with fewer
-    than 2 units get NaN variance (flagging that collapsed strata or more
+    Any leading batch axes (same contract as ``segment_stats``). Variance
+    uses the n-1 denominator (matches eq. 2); strata with fewer than 2
+    units get NaN variance (flagging that collapsed strata or more
     sampling is needed — paper fn. 7).
     """
-    sums, sumsq, counts = segment_stats(x, labels, num_segments)
+    sums, sumsq, counts = segment_stats(x, labels, num_segments,
+                                        backend=backend)
     safe = jnp.maximum(counts, 1.0)
-    means = sums / safe[:, None]
-    ss = sumsq - counts[:, None] * means * means
-    var = jnp.where((counts > 1)[:, None],
-                    ss / jnp.maximum(counts - 1.0, 1.0)[:, None], jnp.nan)
+    means = sums / safe[..., None]
+    ss = sumsq - counts[..., None] * means * means
+    var = jnp.where((counts > 1)[..., None],
+                    ss / jnp.maximum(counts - 1.0, 1.0)[..., None], jnp.nan)
     return means, var, counts

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for per-stratum statistics."""
+"""Pure-jnp oracle for per-stratum statistics, any rank."""
 
 from __future__ import annotations
 
@@ -8,16 +8,45 @@ import jax.numpy as jnp
 
 def segment_stats_ref(x: jax.Array, labels: jax.Array, num_segments: int
                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Per-segment (sum, sum-of-squares, count) of rows of x.
+    """Per-segment (sum, sum-of-squares, count) of rows of x, batched.
 
-    x: (n, d) f32; labels: (n,) int32 in [0, num_segments).
-    Returns sums (k, d), sumsq (k, d), counts (k,).
-    These are exactly the sufficient statistics of the stratified estimators
-    (eq. 3): means, within-stratum variances, and weights.
+    x: ``(..., n, d)`` — or ``(..., n)``, treated as ``d=1``; labels:
+    ``(..., n)`` int32 in ``[0, num_segments)`` with ``-1`` marking
+    masked rows that contribute nothing (the kernel's padding label).
+    Leading axes are shared batch axes. Returns sums ``(..., k, d)``,
+    sumsq ``(..., k, d)``, counts ``(..., k)``.
+    These are exactly the sufficient statistics of the stratified
+    estimators (eq. 3): means, within-stratum variances, and weights.
     """
-    x = x.astype(jnp.float32)
-    sums = jax.ops.segment_sum(x, labels, num_segments=num_segments)
-    sumsq = jax.ops.segment_sum(x * x, labels, num_segments=num_segments)
-    counts = jax.ops.segment_sum(jnp.ones(x.shape[:1], jnp.float32), labels,
-                                 num_segments=num_segments)
-    return sums, sumsq, counts
+    x = jnp.asarray(x, jnp.float32)
+    labels = jnp.asarray(labels, jnp.int32)
+    if x.shape == labels.shape:
+        x = x[..., None]
+    if x.shape[:-1] != labels.shape:
+        raise ValueError(f"labels shape {labels.shape} does not match "
+                         f"x shape {x.shape} (need x = labels shape + (d,))")
+    batch_shape = labels.shape[:-1]
+    n = labels.shape[-1]
+    d = x.shape[-1]
+    b = 1
+    for s in batch_shape:
+        b *= s
+    xb = x.reshape(b, n, d)
+    lb = labels.reshape(b, n)
+    # out-of-range labels contribute nothing, exactly like the kernel's
+    # one-hot compare (an id >= num_segments must not bleed into the next
+    # lane's flat segment space)
+    valid = (lb >= 0) & (lb < num_segments)
+    # one flat segment id space: lane i owns ids [i*k, (i+1)*k)
+    flat = jnp.where(valid, lb, 0) + num_segments * jnp.arange(b)[:, None]
+    # w is the masked value, so w*w is the masked square — never multiply
+    # by the raw xb, which may be NaN in masked rows
+    w = jnp.where(valid[..., None], xb, 0.0).reshape(b * n, d)
+    ones = valid.astype(jnp.float32).reshape(b * n)
+    flat = flat.reshape(b * n)
+    sums = jax.ops.segment_sum(w, flat, num_segments=b * num_segments)
+    sumsq = jax.ops.segment_sum(w * w, flat, num_segments=b * num_segments)
+    counts = jax.ops.segment_sum(ones, flat, num_segments=b * num_segments)
+    return (sums.reshape(*batch_shape, num_segments, d),
+            sumsq.reshape(*batch_shape, num_segments, d),
+            counts.reshape(*batch_shape, num_segments))

@@ -1,0 +1,411 @@
+"""Array-native estimator engine: batched-vs-scalar parity, lane-wise NaN
+semantics, collapse equivalence, CI coverage calibration, and the
+segment_stats-backed stratum-summary dispatch contract."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sampling import (collapsed_strata_estimate, critical_values,
+                                 neyman_allocation, proportional_allocation,
+                                 stratified_mean, stratified_variance,
+                                 satterthwaite_df, summarize_strata,
+                                 two_phase_estimate)
+from repro.core.sampling import tables as T
+from repro.kernels.backend import (BackendFallbackWarning,
+                                   reset_backend_warnings)
+from repro.kernels.segment_stats import ops as seg_ops
+
+RNG = np.random.default_rng(42)
+
+
+def _random_design(n, L, rng, *, empty=()):
+    """Sampled values + labels with the strata in ``empty`` unpopulated."""
+    pop = [h for h in range(L) if h not in empty]
+    labels = rng.choice(pop, size=n)
+    y = rng.normal(2.0, 1.0, n) + 0.5 * labels
+    weights = np.full(L, 1.0 / L)
+    return y, labels, weights
+
+
+# ------------------------------------------------------- scalar one-lane parity
+@pytest.mark.parametrize("n,L", [(200, 5), (37, 3), (500, 20), (10, 1)])
+def test_one_lane_matches_scalar_reference(n, L):
+    """Batched estimators on a single lane == the scalar reference
+    (rtol <= 1e-6 — the acceptance bar; float64 path is ~bitwise)."""
+    rng = np.random.default_rng(n * L)
+    y, labels, w = _random_design(n, L, rng)
+    summ = summarize_strata(y, labels, weights=w, num_strata=L)
+    t = T.stratum_tables(y, labels, weights=w, num_strata=L)
+    assert float(T.stratified_mean(t)) == pytest.approx(
+        stratified_mean(summ), rel=1e-6)
+    assert float(T.stratified_variance(t)) == pytest.approx(
+        stratified_variance(summ), rel=1e-6)
+    assert float(T.satterthwaite_df(t)) == pytest.approx(
+        satterthwaite_df(summ), rel=1e-6)
+    for formula, kw in (("phase2_only", {}),
+                        ("with_phase1_var", {"phase1_var": 2.5})):
+        est = two_phase_estimate(summ, phase1_n=100, formula=formula, **kw)
+        assert float(T.two_phase_variance(t, 100, formula=formula, **kw)) \
+            == pytest.approx(est.variance, rel=1e-6)
+
+
+def test_ragged_lanes_match_per_lane_scalar():
+    """(A, T) batch of ragged designs == a per-lane scalar loop."""
+    L, n = 6, 120
+    rng = np.random.default_rng(0)
+    Y = rng.normal(0, 1, (3, 4, n))
+    LAB = rng.integers(0, L, (3, 4, n))
+    t = T.stratum_tables(Y, LAB, num_strata=L)
+    assert t.batch_shape == (3, 4)
+    mb, vb, db = (T.stratified_mean(t), T.stratified_variance(t),
+                  T.satterthwaite_df(t))
+    tpb = T.two_phase_variance(t, 64)
+    for a in range(3):
+        for j in range(4):
+            summ = summarize_strata(Y[a, j], LAB[a, j], num_strata=L)
+            assert mb[a, j] == pytest.approx(stratified_mean(summ),
+                                             rel=1e-6)
+            assert vb[a, j] == pytest.approx(stratified_variance(summ),
+                                             rel=1e-6)
+            assert db[a, j] == pytest.approx(satterthwaite_df(summ),
+                                             rel=1e-6)
+            est = two_phase_estimate(summ, phase1_n=64)
+            assert tpb[a, j] == pytest.approx(est.variance, rel=1e-6)
+
+
+def test_empty_stratum_lane_nan_and_renormalization():
+    """Lanes with an uncovered positive-weight stratum renormalize (the
+    coverage contract); all-empty lanes are NaN — never an exception."""
+    L = 4
+    rng = np.random.default_rng(1)
+    y, labels, w = _random_design(300, L, rng, empty=(2,))
+    t = T.stratum_tables(y, labels, weights=w, num_strata=L)
+    covered = float(T.covered_weight(t))
+    assert covered == pytest.approx(0.75)
+    # renormalized mean equals the weighted mean over covered strata
+    man = sum(w[h] * y[labels == h].mean() for h in (0, 1, 3)) / covered
+    assert float(T.stratified_mean(t)) == pytest.approx(man, rel=1e-12)
+    # fully empty lane
+    t0 = T.StratumTables(counts=np.zeros(L), sums=np.zeros(L),
+                         sumsqs=np.zeros(L), weights=w)
+    assert np.isnan(T.stratified_mean(t0))
+    assert np.isnan(T.stratified_variance(t0))
+
+
+def test_single_unit_stratum_lane_nan():
+    """n_h == 1 in a covered stratum makes the lane variance NaN (the
+    scalar view raises instead — strict contract)."""
+    y = np.array([1.0, 2.0, 3.0, 4.0, 5.0])
+    labels = np.array([0, 0, 1, 1, 2])
+    t = T.stratum_tables(y, labels, num_strata=3)
+    assert np.isnan(T.stratified_variance(t))
+    assert np.isfinite(T.stratified_mean(t))
+    with pytest.raises(ValueError, match="n_h >= 2"):
+        stratified_variance(summarize_strata(y, labels, num_strata=3))
+
+
+# ----------------------------------------------------------- collapsed strata
+@pytest.mark.parametrize("L", [2, 3, 4, 7, 20])
+def test_collapsed_pairs_matches_scalar(L):
+    rng = np.random.default_rng(L)
+    y = rng.normal(size=L)
+    w = rng.dirichlet(np.ones(L))
+    key = rng.normal(size=L)
+    est = collapsed_strata_estimate(y, w, order_by=key)
+    order = np.argsort(key, kind="stable")
+    var, df = T.collapsed_pairs_variance(y[order], w[order], L,
+                                         num_strata=L)
+    assert float(var) == pytest.approx(est.variance, rel=1e-6)
+    assert float(max(df, 1.0)) == est.df
+
+
+def test_collapsed_pairs_batched_lanes():
+    """(A, T) value lanes against per-lane scalar estimates."""
+    L, A, Tn = 9, 2, 5
+    rng = np.random.default_rng(3)
+    w = rng.dirichlet(np.ones(L), size=A)                  # (A, L)
+    key = rng.normal(size=(A, L))
+    y = rng.normal(size=(A, Tn, L))
+    order = np.argsort(key, axis=-1, kind="stable")
+    y_s = np.take_along_axis(y, order[:, None, :], axis=2)
+    w_s = np.take_along_axis(w, order, axis=1)
+    var, df = T.collapsed_pairs_variance(
+        y_s, w_s[:, None, :], np.full((A, 1), L), num_strata=L)
+    for a in range(A):
+        for t in range(Tn):
+            est = collapsed_strata_estimate(y[a, t], w[a],
+                                            order_by=key[a])
+            assert var[a, t] == pytest.approx(est.variance, rel=1e-6)
+
+
+def test_collapsed_missing_stratum_contract():
+    """NaN stratum values follow the coverage contract: warn + drop +
+    renormalize by default, raise under strict=True."""
+    y = np.array([1.0, np.nan, 3.0, 4.0])
+    w = np.full(4, 0.25)
+    with pytest.warns(UserWarning, match="cover only"):
+        est = collapsed_strata_estimate(y, w)
+    assert est.n == 3
+    assert est.mean == pytest.approx(np.nanmean([1.0, 3.0, 4.0]))
+    # the variance renormalizes consistently with the mean (W_h/covered,
+    # so ×1/covered² per pair term) — else the CI is too narrow for the
+    # renormalized estimate it brackets
+    valid = np.array([1.0, 3.0, 4.0])
+    w_eff = np.full(3, 0.25) / 0.75
+    var_ref, _ = T.collapsed_pairs_variance(valid, w_eff, 3, num_strata=3)
+    assert est.variance == pytest.approx(float(var_ref), rel=1e-12)
+    with pytest.raises(ValueError, match="cover only"):
+        collapsed_strata_estimate(y, w, strict=True)
+
+
+def _scalar_collapse_groups(counts, key, active, min_count=2):
+    """The ci_check backtracking merge, as an independent reference."""
+    order = [h for h in np.argsort(np.where(active, key, np.inf),
+                                   kind="stable") if active[h]]
+    groups = [[h] for h in order]
+    g = 0
+    while g < len(groups):
+        tot = sum(counts[h] for h in groups[g])
+        if tot >= min_count or len(groups) == 1:
+            g += 1
+            continue
+        into = g - 1 if g > 0 else g + 1
+        groups[into] = groups[into] + groups[g]
+        del groups[g]
+        g = max(g - 1, 0)
+    return groups
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_collapse_small_strata_matches_scalar_merge(seed):
+    """Lane-wise collapse reproduces the scalar backtracking merge on
+    random count patterns (incl. boundary cases via small counts)."""
+    rng = np.random.default_rng(seed)
+    L = 8
+    counts = rng.integers(0, 4, L).astype(np.float64)
+    if counts.sum() < 2:
+        counts[0] = 2.0
+    key = rng.normal(size=L)
+    w = np.where(counts > 0, 1.0, 0.0)
+    w = w / max(w.sum(), 1.0)
+    tbl = T.StratumTables(counts=counts, sums=counts * 1.5,
+                          sumsqs=counts * 3.0, weights=w)
+    merged, group_of, n_groups = T.collapse_small_strata(tbl, key)
+    active = (w > 0) | (counts > 0)
+    ref_groups = _scalar_collapse_groups(counts, key, active)
+    assert int(n_groups) == len(ref_groups)
+    # same partition: strata sharing a reference group share a group id
+    for g in ref_groups:
+        ids = {int(group_of[h]) for h in g}
+        assert len(ids) == 1
+    # merged counts per group match
+    got = sorted(float(c) for c in merged.counts[:int(n_groups)])
+    want = sorted(sum(counts[h] for h in g) for g in ref_groups)
+    assert got == pytest.approx(want)
+
+
+def test_large_mean_variance_no_cancellation():
+    """Shifted moments: a huge common mean must not annihilate a tiny
+    variance (regression — raw sumsq − n·mean² lost it entirely)."""
+    rng = np.random.default_rng(9)
+    base = 1e7
+    y = base + rng.normal(0, 1e-2, 400)
+    labels = rng.integers(0, 4, 400)
+    t = T.stratum_tables(y, labels, num_strata=4)
+    v_ref = stratified_variance(summarize_strata(y, labels, num_strata=4))
+    assert float(T.stratified_variance(t)) == pytest.approx(v_ref, rel=1e-6)
+    assert v_ref > 0
+    # per-stratum variances match the two-pass reference
+    for h in range(4):
+        seg = y[labels == h]
+        assert float(t.variances[h]) == pytest.approx(seg.var(ddof=1),
+                                                      rel=1e-6)
+    # and the scalar bridge (summaries -> tables) keeps them too
+    tb = T.tables_from_summaries(summarize_strata(y, labels, num_strata=4))
+    np.testing.assert_allclose(tb.variances, t.variances, rtol=1e-9)
+
+
+def test_device_path_centers_moments_too():
+    """The jnp/kernel constructor also shifts its moments: float32 raw
+    sumsqs at |ȳ| ≫ s would have no significant bits left."""
+    rng = np.random.default_rng(11)
+    y = (1e4 + rng.normal(0, 0.01, (2, 500))).astype(np.float32)
+    lab = rng.integers(0, 4, (2, 500))
+    t_dev = T.stratum_tables(jnp.asarray(y), jnp.asarray(lab),
+                             num_strata=4, backend="jnp")
+    t_host = T.stratum_tables(y.astype(np.float64), lab, num_strata=4)
+    np.testing.assert_allclose(np.asarray(t_dev.variances),
+                               t_host.variances, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(t_dev.means), t_host.means,
+                               rtol=1e-6)
+
+
+def test_masked_rows_with_nan_values_contribute_nothing():
+    """Label -1 (or >= k) rows must contribute nothing even when their
+    value is NaN — 0·NaN poisoning would NaN every segment of the lane,
+    on both the kernel and the oracle path."""
+    x = np.array([[np.nan, 1.0, 2.0]], np.float32)
+    labels = np.array([[-1, 0, 1]], np.int32)
+    for backend in ("jnp", "pallas"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", BackendFallbackWarning)
+            sums, sumsq, counts = seg_ops.segment_stats(
+                x, labels, 2, backend=backend)
+        np.testing.assert_allclose(np.asarray(sums)[0, :, 0], [1.0, 2.0],
+                                   err_msg=backend)
+        np.testing.assert_allclose(np.asarray(sumsq)[0, :, 0], [1.0, 4.0],
+                                   err_msg=backend)
+        np.testing.assert_allclose(np.asarray(counts)[0], [1, 1])
+    # out-of-range + NaN is dropped too
+    x2 = np.array([[np.nan, 1.0]], np.float32)
+    lab2 = np.array([[5, 0]], np.int32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", BackendFallbackWarning)
+        s, q, c = seg_ops.segment_stats(x2, lab2, 2, backend="pallas")
+    assert np.isfinite(np.asarray(s)).all()
+    np.testing.assert_allclose(np.asarray(c)[0], [1, 0])
+
+
+def test_out_of_range_labels_do_not_bleed_across_lanes():
+    """Labels >= num_segments are dropped — in the oracle as in the
+    kernel — instead of contaminating the next lane's segment 0."""
+    from repro.kernels.segment_stats.ref import segment_stats_ref
+
+    x = np.array([[1.0, 10.0, 100.0], [5.0, 6.0, 7.0]], np.float32)
+    labels = np.array([[0, 1, 2], [0, 0, 1]], np.int32)   # 2 >= k
+    sums, _, counts = segment_stats_ref(x, labels, 2)
+    np.testing.assert_allclose(np.asarray(counts), [[1, 1], [2, 1]])
+    np.testing.assert_allclose(np.asarray(sums)[..., 0],
+                               [[1, 10], [11, 7]])
+    # host constructor, same contract when validation is off
+    t = T.stratum_tables(x.astype(np.float64), labels, num_strata=2,
+                         validate=False)
+    np.testing.assert_allclose(t.counts, [[1, 1], [2, 1]])
+
+
+# ----------------------------------------------------------------- allocation
+def test_batched_allocation_matches_scalar():
+    w = np.array([[0.5, 0.3, 0.2], [0.1, 0.1, 0.8]])
+    s = np.array([[1.0, 4.0, 0.1], [0.0, 0.0, 0.0]])
+    prop_b = T.proportional_allocation(w, 100)
+    ney_b = T.neyman_allocation(w, s, 100)
+    for a in range(2):
+        np.testing.assert_array_equal(prop_b[a],
+                                      proportional_allocation(w[a], 100))
+        np.testing.assert_array_equal(ney_b[a],
+                                      neyman_allocation(w[a], s[a], 100))
+
+
+# ------------------------------------------------------------ jit / pytree use
+def test_tables_pytree_through_jit():
+    """StratumTables crosses jit; the same estimator code runs on device
+    arrays and matches the float64 host path."""
+    L, n = 5, 400
+    y = RNG.normal(3.0, 1.0, (2, n)).astype(np.float32)
+    labels = RNG.integers(0, L, (2, n))
+
+    @jax.jit
+    def device_mean_var(yj, labj):
+        t = T.stratum_tables(yj, labj, num_strata=L, backend="jnp")
+        return T.stratified_mean(t), T.two_phase_variance(t, 100)
+
+    m_dev, v_dev = device_mean_var(jnp.asarray(y), jnp.asarray(labels))
+    t_host = T.stratum_tables(y, labels, num_strata=L)
+    np.testing.assert_allclose(np.asarray(m_dev),
+                               T.stratified_mean(t_host), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(v_dev),
+                               T.two_phase_variance(t_host, 100), rtol=1e-3)
+
+
+# ------------------------------------------------------- CI coverage sanity
+def test_two_phase_ci_coverage_calibrated():
+    """Nominal 95% two-phase CIs cover the truth >= ~90% over 1000
+    batched trials on synthetic stratified data (one program, no loop)."""
+    rng = np.random.default_rng(7)
+    L, per, trials, n_h = 8, 500, 1000, 5
+    pop = rng.normal(0, 1, (L, per)) + 3.0 * np.arange(L)[:, None]
+    truth = pop.mean()
+    weights = np.full(L, 1.0 / L)
+    # (T, L, n_h) stratified draws -> (T, L*n_h) sample lanes
+    picks = rng.integers(0, per, (trials, L, n_h))
+    y = np.take_along_axis(pop[None], picks, axis=2)       # (T, L, n_h)
+    labels = np.broadcast_to(np.arange(L)[None, :, None],
+                             y.shape)
+    t = T.stratum_tables(y.reshape(trials, -1),
+                         labels.reshape(trials, -1),
+                         weights=weights, num_strata=L)
+    mean = T.stratified_mean(t)
+    var = T.two_phase_variance(t, phase1_n=10_000)
+    df = T.satterthwaite_df(t)
+    crit = critical_values(0.95, df)
+    half = crit * np.sqrt(var)
+    coverage = (np.abs(mean - truth) <= half).mean()
+    assert 0.90 <= coverage <= 1.0, coverage
+
+
+# ------------------------------------- segment_stats dispatch-marker contract
+def test_stratum_summary_path_dispatches_kernel_batch_native():
+    """The stratum-summary path must feed leading axes to the kernel's
+    batch grid natively: a vmap-of-pallas_call would strip them and
+    record batch_shape == ()."""
+    A, Tn, n, L = 2, 3, 600, 5
+    y = RNG.normal(size=(A, Tn, n)).astype(np.float32)
+    labels = RNG.integers(0, L, (A, Tn, n)).astype(np.int32)
+    seg_ops._reset_dispatch_record()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", BackendFallbackWarning)
+        t = T.stratum_tables(y, labels, num_strata=L, backend="pallas")
+    rec = seg_ops.last_dispatch()
+    assert rec is not None, "pallas kernel never dispatched"
+    assert rec["batch"] == A * Tn
+    assert rec["batch_shape"] == (A, Tn)
+    assert rec["grid"][0] == A * Tn
+    # parity of the kernel-built tables vs the float64 host path (the
+    # host path centers its moments, so compare the shift-independent
+    # derived statistics, not raw sums)
+    t_ref = T.stratum_tables(y, labels, num_strata=L)
+    np.testing.assert_allclose(np.asarray(t.counts), t_ref.counts)
+    np.testing.assert_allclose(np.asarray(t.means), t_ref.means,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(t.variances), t_ref.variances,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_auto_backend_falls_back_with_one_warning_off_tpu():
+    if jax.default_backend() == "tpu":
+        pytest.skip("fallback contract is for non-TPU hosts")
+    reset_backend_warnings()
+    x = RNG.normal(size=(2, 300)).astype(np.float32)
+    lab = RNG.integers(0, 4, (2, 300)).astype(np.int32)
+    seg_ops._reset_dispatch_record()
+    with pytest.warns(BackendFallbackWarning, match="platform="):
+        seg_ops.segment_stats(x, lab, 4)
+    # the oracle served the call: no kernel dispatch was recorded
+    assert seg_ops.last_dispatch() is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # second call must be silent
+        seg_ops.segment_stats(x, lab, 4)
+
+
+def test_engine_summarization_routes_through_segment_stats():
+    """engine._offset_bincount == the historic numpy bincount, via the
+    batched segment_stats path."""
+    from repro.experiments.engine import _offset_bincount
+    A, n, L = 3, 500, 7
+    labels = RNG.integers(0, L, (A, n))
+    valid = RNG.random((A, n)) > 0.2
+    vals = RNG.normal(size=(A, n))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", BackendFallbackWarning)
+        counts = _offset_bincount(labels, valid, L)
+        sums = _offset_bincount(labels, valid, L, weights=vals)
+    off = labels + L * np.arange(A)[:, None]
+    ref_c = np.bincount(off[valid].ravel(), minlength=A * L).reshape(A, L)
+    ref_s = np.bincount(off[valid].ravel(), weights=vals[valid].ravel(),
+                        minlength=A * L).reshape(A, L)
+    np.testing.assert_array_equal(counts, ref_c)
+    np.testing.assert_allclose(sums, ref_s, rtol=1e-5, atol=1e-5)

@@ -35,8 +35,24 @@ def test_kmeans_assign_matches_ref(n, d, k, dtype):
 def test_segment_stats_matches_ref(n, d, k):
     x = RNG.normal(size=(n, d)).astype(np.float32)
     lab = RNG.integers(0, k, n).astype(np.int32)
-    s1, q1, c1 = segment_stats(x, lab, k)
+    s1, q1, c1 = segment_stats(x, lab, k, backend="pallas")
     s2, q2, c2 = segment_stats_ref(jnp.asarray(x), jnp.asarray(lab), k)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("batch_shape", [(3,), (2, 3)])
+def test_segment_stats_batched_matches_ref(batch_shape):
+    """Leading batch axes (app / app×trial stacks) with -1 masked rows."""
+    n, k = 700, 6
+    x = RNG.normal(size=(*batch_shape, n)).astype(np.float32)
+    lab = RNG.integers(-1, k, (*batch_shape, n)).astype(np.int32)
+    s1, q1, c1 = segment_stats(x, lab, k, backend="pallas")
+    s2, q2, c2 = segment_stats_ref(jnp.asarray(x), jnp.asarray(lab), k)
+    assert s1.shape == (*batch_shape, k, 1)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
                                rtol=1e-4, atol=1e-3)
     np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
@@ -47,7 +63,7 @@ def test_segment_stats_matches_ref(n, d, k):
 def test_stratum_moments_match_numpy():
     x = RNG.normal(size=2000).astype(np.float32)
     lab = RNG.integers(0, 10, 2000).astype(np.int32)
-    m, v, c = stratum_moments(x, lab, 10)
+    m, v, c = stratum_moments(x, lab, 10, backend="pallas")
     for h in range(10):
         seg = x[lab == h]
         assert float(m[h, 0]) == pytest.approx(seg.mean(), rel=1e-4)

@@ -166,7 +166,70 @@ def test_sweep_spec_trials_plumbing(engine):
     by_cfg = {r.config_index: r for r in table}
     assert by_cfg[6].p95_err_pct is not None
     assert by_cfg[0].p95_err_pct is None
-    assert "p95_err_pct" in table.to_csv().splitlines()[0]
+    # the CI-claim bridge columns ride along at the trial config
+    assert by_cfg[6].ci_half_pct is not None and by_cfg[6].ci_half_pct > 0
+    assert by_cfg[6].coverage is not None
+    assert 0.0 <= by_cfg[6].coverage <= 1.0
+    assert by_cfg[0].ci_half_pct is None and by_cfg[0].coverage is None
+    hdr = table.to_csv().splitlines()[0]
+    for col in ("p95_err_pct", "ci_half_pct", "coverage"):
+        assert col in hdr
+
+
+def test_run_trials_ci_matches_collapsed_reference(engine):
+    """Per-trial CI half-widths == a hand-built collapsed-pairs reference
+    (eq. 4 over occupied strata in baseline-CPI order), and coverage is
+    the fraction of trials whose CI contains the truth."""
+    from repro.core.sampling.types import critical_value
+
+    spec = TrialSpec(trials=16, seed=3, config_index=6)
+    res = run_trials(engine, spec, apps=(APP,))
+    exp = engine.app(APP)
+    truth = float(exp.truth[6])
+
+    labels, weights = exp.dg_labels, exp.dg_weights
+    pool = exp.cpi(6, exp.idx1)
+    baseline = exp.cpi0_1.astype(np.float32)
+    L = exp.num_strata
+    members = [np.flatnonzero(labels == h) for h in range(L)]
+    occ = [h for h in range(L) if members[h].size]
+    key = np.array([baseline[members[h]].mean() if members[h].size
+                    else np.inf for h in range(L)], np.float32)
+    order = [h for h in np.argsort(key, kind="stable") if members[h].size]
+    v_cnt = len(occ)
+    df = v_cnt - v_cnt // 2
+    crit = critical_value(spec.confidence, float(df))
+
+    u = trial_uniforms(spec, "dg", 1, L)[0]
+    for t in range(0, spec.trials, 5):
+        y = {}
+        for h in occ:
+            m = members[h]
+            pick = min(int(np.float32(u[t, h]) * np.float32(m.size)),
+                       m.size - 1)
+            y[h] = float(pool[m[pick]])
+        ys = [y[h] for h in order]
+        ws = [float(weights[h]) for h in order]
+        var = 0.0
+        g_count = v_cnt // 2
+        for j in range(g_count):
+            tri = (v_cnt % 2 == 1) and (j == g_count - 1)
+            idx = [2 * j, 2 * j + 1] + ([2 * j + 2] if tri else [])
+            vals = np.array([ys[i] for i in idx])
+            s2 = (vals[0] - vals[1]) ** 2 / 4.0 if not tri \
+                else float(vals.var(ddof=1))
+            var += sum(ws[i] ** 2 for i in idx) * s2
+        half_ref = crit * np.sqrt(var)
+        assert res.half_widths["dg"][0, t] == pytest.approx(
+            half_ref, rel=2e-4), t
+    # coverage is the empirical fraction of covering trials
+    covers = (np.abs(res.estimates["dg"][0] - truth)
+              <= res.half_widths["dg"][0])
+    assert res.coverage["dg"][0] == pytest.approx(covers.mean(), abs=1e-6)
+    # every scheme reports (A, T) half-widths and (A,) coverage in [0, 1]
+    for scheme in spec.schemes:
+        assert res.half_widths[scheme].shape == (1, spec.trials)
+        assert 0.0 <= float(res.coverage[scheme][0]) <= 1.0
 
 
 # ------------------------------------------------ satellite bug fixes
@@ -235,12 +298,16 @@ def test_sharded_engine_matches_single_host():
                                rtol=1e-7)
     np.testing.assert_allclose(s1.column("margin_pct"),
                                s2.column("margin_pct"), rtol=1e-5)
-    # identical Monte-Carlo draws -> identical trial estimates
+    # identical Monte-Carlo draws -> identical trial estimates and CIs
     mc1 = run_trials(single, TrialSpec(trials=64), apps=APPS2)
     mc2 = run_trials(sharded, TrialSpec(trials=64), apps=APPS2)
     for scheme in mc1.errors:
         np.testing.assert_allclose(mc1.errors[scheme], mc2.errors[scheme],
                                    rtol=1e-6)
+        np.testing.assert_allclose(mc1.half_widths[scheme],
+                                   mc2.half_widths[scheme], rtol=1e-6)
+        np.testing.assert_allclose(mc1.coverage[scheme],
+                                   mc2.coverage[scheme], rtol=1e-6)
     # merged ledger totals equal single-host totals
     assert sharded.memo.total_charges() == single.memo.total_charges()
     for e1, e2 in zip(single.build(APPS2), sharded.build(APPS2)):
