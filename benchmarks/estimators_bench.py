@@ -22,8 +22,9 @@ import warnings
 
 import numpy as np
 
-from repro.core.sampling import (critical_values, summarize_strata,
-                                 two_phase_estimate)
+from repro.core.sampling import (WeightedPoint, critical_values,
+                                 summarize_strata, two_phase_estimate)
+from repro.core.sampling import plan as sampling_plan
 from repro.core.sampling import tables as T
 
 A_LANES = 4          # app-like axis
@@ -31,6 +32,10 @@ T_LANES = 250        # trial-like axis
 N_SAMPLES = 200      # sampled units per lane
 L_STRATA = 20
 PHASE1_N = 6000
+
+SWEEP_A = 10         # sweep-estimation shape: apps ...
+SWEEP_C = 7          # ... x configs
+SWEEP_REPS = 50      # timed repetitions (both paths, post-warmup)
 
 
 def _rel_err(a, b):
@@ -97,5 +102,56 @@ def bench_estimators() -> dict:
     print(f"estimators_mean_margin_pct,"
           f"{float(np.nanmean(100 * margins / np.abs(means_b))):.3f},"
           "sanity: eq.6 margin at these lane sizes")
+    sweep = _bench_sweep_estimates()
     return {"max_rel_err": err, "speedup": speedup,
-            "scalar_s": scalar_s, "batched_s": batched_s}
+            "scalar_s": scalar_s, "batched_s": batched_s, **sweep}
+
+
+def _host_sweep_reduction(cpi, valid, weights, truth):
+    """The historic host-numpy sweep reduction (pre-plan ``run_sweep``):
+    covered-weight-renormalized weighted mean + percent error, float64."""
+    w = np.where(valid, weights, 0.0)
+    covered = w.sum(axis=1)
+    ests = (cpi * w[:, None, :]).sum(axis=2) / covered[:, None]
+    errs = 100.0 * np.abs(ests - truth) / truth
+    return ests, errs
+
+
+def _bench_sweep_estimates() -> dict:
+    """Host-numpy vs jitted on-device sweep estimation (the run_sweep
+    stratified path): parity gated at 1e-6 in run.py claim validation,
+    speedup recorded for the cross-PR ledger."""
+    rng = np.random.default_rng(1)
+    shape = (SWEEP_A, SWEEP_C, L_STRATA)
+    cpi = rng.normal(2.0, 0.6, shape)
+    valid = rng.random((SWEEP_A, L_STRATA)) > 0.1
+    valid[:, 0] = True                        # no fully-empty app lanes
+    weights = rng.random((SWEEP_A, L_STRATA))
+    weights /= weights.sum(axis=1, keepdims=True)
+    truth = rng.normal(2.0, 0.1, (SWEEP_A, SWEEP_C))
+    est = WeightedPoint()
+
+    est_d, err_d = est.sweep_estimates(cpi, valid, weights, truth)  # warmup
+    t0 = time.perf_counter()
+    for _ in range(SWEEP_REPS):
+        est_d, err_d = est.sweep_estimates(cpi, valid, weights, truth)
+    device_s = (time.perf_counter() - t0) / SWEEP_REPS
+
+    est_h, err_h = _host_sweep_reduction(cpi, valid, weights, truth)
+    t0 = time.perf_counter()
+    for _ in range(SWEEP_REPS):
+        est_h, err_h = _host_sweep_reduction(cpi, valid, weights, truth)
+    host_s = (time.perf_counter() - t0) / SWEEP_REPS
+
+    err = max(_rel_err(est_d, est_h), _rel_err(err_d, err_h))
+    speedup = host_s / max(device_s, 1e-12)
+    marker = sampling_plan.last_sweep_dispatch() or {}
+    print(f"sweep_est_host_us,{host_s * 1e6:.1f},"
+          f"numpy reduction ({SWEEP_A}x{SWEEP_C}x{L_STRATA})")
+    print(f"sweep_est_device_us,{device_s * 1e6:.1f},"
+          f"jitted StratumTables program (x64={marker.get('x64')})")
+    print(f"sweep_est_speedup,{speedup:.2f},host/device")
+    print(f"sweep_est_max_rel_err,{err:.2e},device vs host f64")
+    return {"sweep_max_rel_err": err, "sweep_speedup": speedup,
+            "sweep_host_s": host_s, "sweep_device_s": device_s,
+            "sweep_x64": bool(marker.get("x64", False))}

@@ -15,11 +15,12 @@ from repro.core.sampling import (Estimate, StratumSummary,
                                  phase2_sizes_for_margin, srs_estimate,
                                  stratified_estimate, summarize_strata,
                                  two_phase_estimate)
+from repro.core.sampling import SamplingPlan
 from repro.experiments import SweepSpec, TrialSpec, run_sweep, run_trials
 from repro.simcpu import CONFIGS
 
 from .simcpu_common import (NUM_STRATA, all_apps, build_experiment,
-                            get_engine, scheme_selection)
+                            get_engine, plan_selection)
 
 
 def _row(name: str, value, derived: str = "") -> None:
@@ -176,7 +177,8 @@ def bench_ci_collapsed() -> dict:
     out = {}
     for name in all_apps():
         exp = build_experiment(name)
-        sel, weights = scheme_selection(exp, "rfv", "random", seed=3)
+        sel, weights = plan_selection(
+            exp, SamplingPlan.from_strings("rfv", "random"), seed=3)
         y = np.array([float(exp.cpi(6, s)[0]) for s in sel if s.size])
         w = np.array([weights[h] for h, s in enumerate(sel) if s.size])
         w = w / w.sum()
@@ -204,9 +206,9 @@ def bench_selection_centroid() -> dict:
     engine = get_engine()
     out = {name: {} for name in all_apps()}
     for scheme in ("bbv", "rfv", "dg"):
-        table = run_sweep(engine, SweepSpec(apps=tuple(all_apps()),
-                                            scheme=scheme,
-                                            policy="centroid"))
+        table = run_sweep(engine, SweepSpec(
+            apps=tuple(all_apps()),
+            plan=SamplingPlan.from_strings(scheme, "centroid")))
         for name in all_apps():
             out[name][scheme] = float(
                 table.filter(app=name).column("err_pct").max())
@@ -229,8 +231,9 @@ def bench_selection_mean() -> dict:
     engine = get_engine()
     out = {name: {} for name in all_apps()}
     for scheme in ("bbv", "rfv", "dg"):
-        table = run_sweep(engine, SweepSpec(apps=tuple(all_apps()),
-                                            scheme=scheme, policy="mean"))
+        table = run_sweep(engine, SweepSpec(
+            apps=tuple(all_apps()),
+            plan=SamplingPlan.from_strings(scheme, "mean")))
         for name in all_apps():
             out[name][scheme] = float(
                 table.filter(app=name).column("err_pct").max())
@@ -258,7 +261,8 @@ def bench_distribution_approx() -> dict:
         ks = {}
         for k in (20, 500):
             if k == 20:
-                sel, weights = scheme_selection(exp, "rfv", "centroid")
+                sel, weights = plan_selection(
+                    exp, SamplingPlan.from_strings("rfv", "centroid"))
             else:
                 km = kmeans(exp.rfv_z, min(k, exp.idx1.size // 2), seed=0)
                 w = np.bincount(km.labels,

@@ -16,12 +16,13 @@ from typing import Optional
 import numpy as np
 
 from repro.experiments import (NUM_STRATA, PHASE1_SEED, AppExperiment,
-                               ExperimentEngine, scheme_selection)
+                               ExperimentEngine, plan_selection,
+                               scheme_selection)
 from repro.simcpu import APP_NAMES
 
 __all__ = ["NUM_STRATA", "PHASE1_SEED", "AppExperiment", "all_apps",
-           "build_experiment", "get_engine", "scheme_selection",
-           "weighted_estimate"]
+           "build_experiment", "get_engine", "plan_selection",
+           "scheme_selection", "weighted_estimate"]
 
 _ENGINE: Optional[ExperimentEngine] = None
 

@@ -18,9 +18,10 @@ exactly.
 
 import numpy as np
 
-from repro.core.sampling import Stratification, TwoPhaseFlow, srs_estimate
-from repro.experiments import (ExperimentEngine, TrialSpec, run_trials,
-                               scheme_selection)
+from repro.core.sampling import (Centroid, RFVClusters, SamplingPlan,
+                                 Stratification, TwoPhaseFlow, srs_estimate)
+from repro.experiments import (ExperimentEngine, TrialSpec, plan_selection,
+                               run_trials)
 
 APP = "502.gcc_r"          # the paper's hardest application
 NUM_STRATA = 20
@@ -42,8 +43,9 @@ def main() -> None:
           f"CPI = {est1.mean:.3f} ± {est1.margin_pct:.2f}%  "
           f"(true {true0:.3f})")
 
-    # Steps 2+3 — stratify on RFVs, pick centroids.
-    selected, weights = scheme_selection(exp, "rfv", "centroid")
+    # Steps 2+3 — stratify on RFVs, pick centroids: one SamplingPlan.
+    plan = SamplingPlan(stratifier=RFVClusters(), policy=Centroid())
+    selected, weights = plan_selection(exp, plan)
     print(f"[2] stratified into {exp.num_strata} strata, "
           f"weights {np.round(np.sort(weights)[-3:], 3)} (top 3)")
 

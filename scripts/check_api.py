@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Public-API surface checker for the sampling-plan redesign.
+
+Two AST-level gates over the public ``repro.core.sampling`` and
+``repro.experiments`` packages (no third-party deps, mirrors
+``check_docstrings.py``):
+
+1. **``__all__`` declarations** — every module in scope must declare its
+   public surface explicitly, so the docs tree and the registry shims
+   can rely on a stable import contract.
+2. **No string-literal scheme/policy dispatch** — the sampling-plan
+   registry (``repro.core.sampling.plan``) is the ONLY place names like
+   ``"bbv"``/``"rfv"``/``"dg"``/``"centroid"``/``"mean"``/``"random"``
+   may be mapped to behavior. A comparison or membership test against
+   one of those literals (``if scheme == "bbv": ...``,
+   ``policy in ("mean", "random")``) re-creates the pre-plan dispatch
+   this redesign removed, so any such node outside the declared shim
+   allowlist fails the build. Registrations (dict/tuple literals,
+   keyword defaults, docstrings) are fine — only *comparisons*
+   dispatch.
+
+Exit code 1 with a ``path:line: reason`` listing on any violation.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+SCOPE = ("src/repro/core/sampling", "src/repro/experiments")
+
+# the scheme/policy names the pre-plan engine dispatched on (ISSUE 5);
+# comparisons against them outside plan.py are re-grown string dispatch
+DISPATCH_LITERALS = frozenset(
+    {"bbv", "rfv", "dg", "centroid", "mean", "random"})
+
+# modules allowed to compare dispatch literals: none — even the legacy
+# shims resolve names through the registry instead of comparing them
+SHIM_ALLOWLIST: frozenset[str] = frozenset()
+
+
+def _literal_strs(node: ast.AST):
+    """String constants inside a comparator (descending into tuples &c)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for elt in node.elts:
+            yield from _literal_strs(elt)
+
+
+def check_file(path: pathlib.Path, rel: str) -> list[str]:
+    """All API-contract violations in one module."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    errors: list[str] = []
+
+    has_all = any(
+        isinstance(node, ast.Assign)
+        and any(isinstance(t, ast.Name) and t.id == "__all__"
+                for t in node.targets)
+        for node in tree.body)
+    if not has_all:
+        errors.append(f"{rel}:1: module does not declare __all__")
+
+    if pathlib.PurePosixPath(rel).name in SHIM_ALLOWLIST:
+        return errors
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        hit = sorted(
+            s for operand in (node.left, *node.comparators)
+            for s in _literal_strs(operand) if s in DISPATCH_LITERALS)
+        if hit:
+            errors.append(
+                f"{rel}:{node.lineno}: scheme/policy string-literal "
+                f"dispatch on {hit} — route through the sampling-plan "
+                "registry (repro.core.sampling.plan) instead")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    """Check every ``.py`` under the scoped packages."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    scope = argv or [str(root / p) for p in SCOPE]
+    errors: list[str] = []
+    n_files = 0
+    for top in scope:
+        top_p = pathlib.Path(top)
+        if not top_p.is_dir():
+            errors.append(f"{top}: scope path does not exist — the check "
+                          "would pass vacuously")
+            continue
+        for path in sorted(top_p.rglob("*.py")):
+            if "__pycache__" in path.parts:
+                continue
+            n_files += 1
+            rel = str(path.relative_to(root)) if path.is_relative_to(root) \
+                else str(path)
+            errors.extend(check_file(path, rel))
+    if n_files == 0:
+        errors.append("no Python files found in scope")
+    for e in errors:
+        print(e)
+    print(f"check_api: {n_files} files, {len(errors)} violation(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

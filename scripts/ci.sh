@@ -20,10 +20,13 @@ fi
 # degrades gracefully without them
 pip install -q -r requirements-dev.txt 2>/dev/null || true
 
-# docs gate: docstring presence on the experiments/kernels surface and
-# README/docs link integrity (both offline; see docs/)
+# docs + API gates: docstring presence on the experiments/kernels
+# surface, README/docs link integrity, and the sampling-plan API
+# contract (__all__ everywhere public + no scheme/policy string-literal
+# dispatch outside the plan registry) — all offline; see docs/
 python scripts/check_docstrings.py
 python scripts/check_docs_links.py
+python scripts/check_api.py
 
 # estimator parity suite first (fast, no engine builds): batched
 # StratumTables estimators must match the scalar reference before the

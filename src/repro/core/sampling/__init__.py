@@ -3,14 +3,26 @@
 The scalar estimators are one-lane views over the array-native engine in
 ``tables`` (``StratumTables`` + batched lane-wise estimators); import
 ``repro.core.sampling.tables`` directly for the batched API.
+
+``plan`` holds the composable design objects — ``SamplingPlan`` =
+``Stratifier`` × ``SelectionPolicy`` × ``Estimator`` — and the registry
+(``register_stratifier`` / ``register_policy``) through which new
+stratifications and selection policies plug into the experiment engine
+without engine edits.
 """
 
-from . import tables
+from . import plan, tables
 from .allocation import (neyman_allocation, proportional_allocation,
                          required_total_neyman, required_total_proportional)
 from .collapsed import collapsed_strata_estimate
 from .dalenius import dalenius_gurney_strata, stratum_products
 from .design import Stratification, TwoPhaseFlow
+from .plan import (BBVClusters, Centroid, CollapsedPairsCI, DaleniusGurney,
+                   Estimator, RandomUnit, RankedSetUnit, RFVClusters,
+                   SamplingPlan, SelectionPolicy, Stratifier, StratumMean,
+                   TwoPhaseCI, WeightedPoint, make_policy, make_stratifier,
+                   register_policy, register_stratifier, registered_policies,
+                   registered_stratifiers)
 from .selection import (select_centroid, select_mean, select_random,
                         weighted_point_estimate)
 from .srs import draw_srs, srs_estimate, srs_required_n
@@ -19,7 +31,8 @@ from .stratified import (StratumSummary, satterthwaite_df,
                          stratified_estimate_from_samples, stratified_mean,
                          stratified_variance, summarize_strata)
 from .tables import StratumTables, stratum_tables, tables_from_summaries
-from .two_phase import phase2_sizes_for_margin, two_phase_estimate
+from .two_phase import (phase2_sizes_for_margin, two_phase_estimate,
+                        two_phase_estimate_tables)
 from .types import (Estimate, apply_coverage_contract, critical_value,
                     critical_values)
 
@@ -32,11 +45,20 @@ __all__ = [
     "stratified_estimate", "stratified_estimate_from_samples",
     "satterthwaite_df",
     "collapsed_strata_estimate",
-    "two_phase_estimate", "phase2_sizes_for_margin",
+    "two_phase_estimate", "two_phase_estimate_tables",
+    "phase2_sizes_for_margin",
     "dalenius_gurney_strata", "stratum_products",
     "proportional_allocation", "neyman_allocation",
     "required_total_neyman", "required_total_proportional",
     "select_random", "select_centroid", "select_mean",
     "weighted_point_estimate",
     "TwoPhaseFlow", "Stratification",
+    # sampling-plan objects + registry
+    "plan", "SamplingPlan", "Stratifier", "SelectionPolicy", "Estimator",
+    "BBVClusters", "RFVClusters", "DaleniusGurney",
+    "Centroid", "StratumMean", "RandomUnit", "RankedSetUnit",
+    "WeightedPoint", "CollapsedPairsCI", "TwoPhaseCI",
+    "register_stratifier", "register_policy",
+    "registered_stratifiers", "registered_policies",
+    "make_stratifier", "make_policy",
 ]

@@ -13,6 +13,14 @@ import numpy as np
 from . import tables as _tables
 from .types import critical_value
 
+__all__ = [
+    "proportional_allocation",
+    "neyman_allocation",
+    "required_total_neyman",
+    "required_total_proportional",
+]
+
+
 
 def proportional_allocation(weights: Sequence[float], n_total: int) -> np.ndarray:
     """n_h proportional to W_h, each stratum >= 2 (so s_h^2 is estimable).

@@ -24,6 +24,11 @@ import numpy as np
 from . import tables as _tables
 from .types import Estimate, apply_coverage_contract
 
+__all__ = [
+    "collapsed_strata_estimate",
+]
+
+
 
 def collapsed_strata_estimate(
     y_per_stratum: Sequence[float],

@@ -10,6 +10,12 @@ from __future__ import annotations
 
 import numpy as np
 
+__all__ = [
+    "dalenius_gurney_strata",
+    "stratum_products",
+]
+
+
 
 def dalenius_gurney_strata(
     x,

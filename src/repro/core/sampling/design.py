@@ -15,20 +15,16 @@ population, an LM sampled-eval corpus, or a step-profiling stream.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
-import jax
 import numpy as np
 
-from ..clustering.kmeans import KMeansResult, kmeans
-from ..clustering.standardize import Standardizer
-from .collapsed import collapsed_strata_estimate
-from .selection import (select_centroid, select_mean, select_random,
-                        weighted_point_estimate)
+from . import plan as _plan
+from .selection import weighted_point_estimate
 from .srs import draw_srs, srs_estimate
-from .stratified import StratumSummary
-from .two_phase import two_phase_estimate
 from .types import Estimate
+
+__all__ = ["Stratification", "TwoPhaseFlow"]
 
 
 @dataclasses.dataclass
@@ -87,64 +83,83 @@ class TwoPhaseFlow:
         phase1_baseline_y: np.ndarray,
         features: Optional[np.ndarray],
         *,
-        num_strata: int,
-        scheme: str = "rfv",
-        seed: int = 0,
-        kmeans_backend: str = "jnp",
+        num_strata: Optional[int] = None,
+        scheme: Union[str, "_plan.Stratifier"] = "rfv",
+        seed: Optional[int] = None,
+        kmeans_backend: Optional[str] = None,
     ) -> Stratification:
-        """scheme: 'rfv' | 'bbv' (k-means on features) or 'cpi'
-        (Dalenius-Gurney on baseline y)."""
-        if scheme in ("rfv", "bbv"):
-            if features is None:
-                raise ValueError(f"scheme {scheme!r} needs a feature matrix")
-            std, z = Standardizer.fit_transform(features)
-            z = np.asarray(z)
-            km: KMeansResult = kmeans(z, num_strata,
-                                      key=jax.random.PRNGKey(seed),
-                                      backend=kmeans_backend, restarts=3)
-            labels, centroids, feats = km.labels, km.centroids, z
-        elif scheme == "cpi":
-            from .dalenius import dalenius_gurney_strata
-            labels = dalenius_gurney_strata(phase1_baseline_y, num_strata)
-            # "centroid" reduces to the stratum-mean CPI (paper V.B.1)
-            centroids = np.array([
-                [phase1_baseline_y[labels == h].mean()]
-                if (labels == h).any() else [np.nan]
-                for h in range(num_strata)
-            ])
-            feats = np.asarray(phase1_baseline_y, dtype=np.float64)[:, None]
+        """Stratify the phase-1 sample under a ``Stratifier``.
+
+        ``scheme`` is a plan-object ``Stratifier`` (``RFVClusters``,
+        ``BBVClusters``, ``DaleniusGurney`` or any registry plug-in)
+        owning its k-means / boundary-search parameters — the
+        ``num_strata``/``seed``/``kmeans_backend`` keywords then belong
+        to the object, and passing a *conflicting* value here raises
+        rather than being silently ignored. Passing a string
+        (``'rfv'`` | ``'bbv'`` | ``'cpi'``/``'dg'``) is deprecated: it
+        resolves through the plan registry (the keywords parameterize
+        the constructed object) and warns.
+        """
+        if isinstance(scheme, str):
+            _plan.warn_string_dispatch(
+                "TwoPhaseFlow.stratify(scheme=...)",
+                "pass a Stratifier object (e.g. RFVClusters(num_strata=20))")
+            if num_strata is None:
+                raise ValueError("string schemes need num_strata")
+            scheme = _plan.make_stratifier(
+                scheme, num_strata=num_strata, seed=seed or 0,
+                backend=kmeans_backend or "jnp")
         else:
-            raise ValueError(f"unknown scheme {scheme!r}")
+            for arg, field, val in (("num_strata", "num_strata", num_strata),
+                                    ("seed", "seed", seed),
+                                    ("kmeans_backend", "backend",
+                                     kmeans_backend)):
+                if val is not None and getattr(scheme, field, None) != val:
+                    raise ValueError(
+                        f"{arg}={val!r} conflicts with the Stratifier "
+                        f"object ({field}="
+                        f"{getattr(scheme, field, None)!r}); configure "
+                        "the Stratifier instead")
+        labels, centroids, feats = scheme.fit(phase1_baseline_y, features)
+        num_strata = scheme.num_strata
         counts = np.bincount(labels, minlength=num_strata).astype(np.float64)
         weights = counts / counts.sum()
         return Stratification(
             labels=np.asarray(labels), weights=weights,
             centroids=np.asarray(centroids), features=np.asarray(feats),
             phase1_indices=np.asarray(phase1_indices),
-            phase1_baseline_y=np.asarray(phase1_baseline_y), scheme=scheme)
+            phase1_baseline_y=np.asarray(phase1_baseline_y),
+            scheme=type(scheme).name)
 
     def select(
         self,
         strat: Stratification,
         *,
-        policy: str = "centroid",
-        per_stratum: int = 1,
+        policy: Union[str, "_plan.SelectionPolicy"] = "centroid",
+        per_stratum: Optional[int] = None,
         seed: int = 0,
     ) -> list[np.ndarray]:
-        """Population indices of selected regions, one array per stratum."""
-        if policy == "random":
-            local = select_random(strat.labels, strat.num_strata,
-                                  np.random.default_rng(seed),
-                                  per_stratum=per_stratum)
-        elif policy == "centroid":
-            local = select_centroid(strat.labels, strat.features,
-                                    strat.centroids, per_stratum=per_stratum)
-        elif policy == "mean":
-            local = select_mean(strat.labels, strat.phase1_baseline_y,
-                                num_strata=strat.num_strata,
-                                per_stratum=per_stratum)
-        else:
-            raise ValueError(f"unknown policy {policy!r}")
+        """Population indices of selected regions, one array per stratum.
+
+        ``policy`` is a plan-object ``SelectionPolicy`` (``Centroid``,
+        ``StratumMean``, ``RandomUnit(per_stratum=...)``,
+        ``RankedSetUnit`` or any registry plug-in); its ``select_local``
+        runs against the stratification. ``per_stratum`` overrides the
+        policy's own configuration when given (``None`` defers to it).
+        Passing a string is deprecated and resolves through the plan
+        registry — warning once per call site.
+        """
+        if isinstance(policy, str):
+            _plan.warn_string_dispatch(
+                "TwoPhaseFlow.select(policy=...)",
+                "pass a SelectionPolicy object (e.g. Centroid())")
+            policy = _plan.make_policy(policy,
+                                       per_stratum=per_stratum or 1)
+        local = policy.select_local(
+            strat.labels, features=strat.features,
+            centroids=strat.centroids, baseline=strat.phase1_baseline_y,
+            num_strata=strat.num_strata, seed=seed,
+            per_stratum=per_stratum)
         return [strat.phase1_indices[l] for l in local]
 
     # -- Step 4a: day-to-day point estimate ----------------------------------
@@ -172,11 +187,11 @@ class TwoPhaseFlow:
         *,
         confidence: float = 0.95,
     ) -> Estimate:
-        """Practical one-unit-per-stratum CI (paper V.A.3, Fig 9)."""
+        """Practical one-unit-per-stratum CI (paper V.A.3, Fig 9) — the
+        plan-level ``CollapsedPairsCI`` estimator view."""
         y_h = np.array([float(measure(s)[0]) for s in selected])
-        return collapsed_strata_estimate(
-            y_h, strat.weights, order_by=strat.stratum_order_key(),
-            confidence=confidence)
+        return _plan.CollapsedPairsCI(confidence=confidence).estimate(
+            y_h, strat.weights, order_by=strat.stratum_order_key())
 
     # -- Step 4b: periodic multi-unit CI check -------------------------------
     def ci_check(
@@ -194,7 +209,8 @@ class TwoPhaseFlow:
         provide a within-stratum variance; they are collapsed into the
         neighboring stratum in baseline-CPI order (the paper fn.7 remedy)
         instead of crashing the variance formula — one-lane view over
-        ``tables.collapse_small_strata`` (the same merge the batched
+        ``tables.collapse_small_strata``, estimated by the plan-level
+        ``TwoPhaseCI`` view (the same merge + eq. 5/6 the batched
         estimators apply lane-wise).
         """
         from . import tables as _tables
@@ -218,12 +234,7 @@ class TwoPhaseFlow:
             t, strat.stratum_order_key())
         if int(n_groups) < 1:
             raise ValueError("ci_check needs at least 2 sampled units")
-        summaries = [
-            StratumSummary(weight=float(merged.weights[g]),
-                           n=int(merged.counts[g]),
-                           mean=float(merged.means[g]),
-                           var=float(merged.variances[g]))
-            for g in range(int(n_groups))]
-        return two_phase_estimate(summaries,
-                                  phase1_n=strat.phase1_indices.size,
-                                  confidence=confidence)
+        # estimate from the merged-group lanes only (trailing slots are
+        # zero-count, zero-weight: they contribute nothing)
+        return _plan.TwoPhaseCI(confidence=confidence).estimate(
+            merged, phase1_n=strat.phase1_indices.size)

@@ -16,6 +16,14 @@ import numpy as np
 
 from .types import apply_coverage_contract
 
+__all__ = [
+    "select_random",
+    "select_centroid",
+    "select_mean",
+    "weighted_point_estimate",
+]
+
+
 
 def select_random(
     labels: np.ndarray,

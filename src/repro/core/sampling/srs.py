@@ -16,6 +16,13 @@ import numpy as np
 
 from .types import Estimate, as_float_array
 
+__all__ = [
+    "srs_estimate",
+    "srs_required_n",
+    "draw_srs",
+]
+
+
 
 def srs_estimate(
     y,

@@ -25,6 +25,17 @@ import numpy as np
 from . import tables as _tables
 from .types import Estimate, StratumSummary, as_float_array
 
+__all__ = [
+    "StratumSummary",
+    "summarize_strata",
+    "stratified_mean",
+    "stratified_variance",
+    "satterthwaite_df",
+    "stratified_estimate",
+    "stratified_estimate_from_samples",
+]
+
+
 
 def summarize_strata(
     y,

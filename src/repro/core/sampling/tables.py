@@ -38,6 +38,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+__all__ = [
+    "StratumTables",
+    "stratum_tables",
+    "tables_from_summaries",
+    "covered_weight",
+    "total_weight",
+    "stratified_mean",
+    "stratified_variance",
+    "satterthwaite_df",
+    "two_phase_variance",
+    "collapse_small_strata",
+    "collapsed_pairs_variance",
+    "proportional_allocation",
+    "neyman_allocation",
+    "masked_srs_stats",
+]
+
+
 
 def _ns(*arrays):
     """numpy or jax.numpy, picked from the argument types (tracers are

@@ -26,6 +26,58 @@ from . import tables as _tables
 from .stratified import StratumSummary
 from .types import Estimate, apply_coverage_contract
 
+__all__ = ["two_phase_estimate", "two_phase_estimate_tables",
+           "phase2_sizes_for_margin"]
+
+
+def two_phase_estimate_tables(
+    t: "_tables.StratumTables",
+    phase1_n: int,
+    *,
+    phase1_var: Optional[float] = None,
+    confidence: float = 0.95,
+    formula: str = "phase2_only",
+    strict: bool = False,
+) -> Estimate:
+    """Two-phase mean + CI from one-lane ``StratumTables`` directly.
+
+    The core the summaries wrapper and the plan-level ``TwoPhaseCI``
+    estimator share: one-lane view over ``tables.two_phase_variance``
+    with the package-wide coverage contract applied (see
+    ``two_phase_estimate`` for the contract's terms).
+    """
+    if phase1_n < 1:
+        raise ValueError("phase-1 sample size must be >= 1")
+    covered = float(_tables.covered_weight(t))
+    total = float(_tables.total_weight(t))
+    frac = apply_coverage_contract(
+        covered, total, strict=strict,
+        empty_msg="every stratum is empty; no units to estimate from",
+        what="sampled strata")
+    if frac <= 0.0:
+        return Estimate(mean=float("nan"), variance=float("nan"),
+                        n=0, df=None, confidence=confidence,
+                        scheme=f"two_phase[{formula}]")
+
+    mean = float(_tables.stratified_mean(t))
+    degenerate = bool(((t.counts > 0) & (t.weights > 0)
+                       & (t.counts < 2)).any())
+    if degenerate:
+        msg = ("within-stratum variance needs n_h >= 2 (paper fn.7); "
+               "use collapsed strata for one-unit-per-stratum designs")
+        if strict:
+            raise ValueError(msg)
+        warnings.warn(msg, UserWarning, stacklevel=3)
+    var = float(_tables.two_phase_variance(
+        t, phase1_n, formula=formula, phase1_var=phase1_var))
+
+    n = int(np.asarray(t.counts).sum())
+    df = float(_tables.satterthwaite_df(t))
+    if not np.isfinite(df):
+        df = None
+    return Estimate(mean=mean, variance=var, n=n, df=df,
+                    confidence=confidence, scheme=f"two_phase[{formula}]")
+
 
 def two_phase_estimate(
     summaries: Sequence[StratumSummary],
@@ -50,38 +102,10 @@ def two_phase_estimate(
     warn and yield a NaN variance (``strict=True`` raises) — the point
     estimate stays finite either way.
     """
-    if phase1_n < 1:
-        raise ValueError("phase-1 sample size must be >= 1")
-    t = _tables.tables_from_summaries(summaries)
-    covered = float(_tables.covered_weight(t))
-    total = float(_tables.total_weight(t))
-    frac = apply_coverage_contract(
-        covered, total, strict=strict,
-        empty_msg="every stratum is empty; no units to estimate from",
-        what="sampled strata")
-    if frac <= 0.0:
-        return Estimate(mean=float("nan"), variance=float("nan"),
-                        n=0, df=None, confidence=confidence,
-                        scheme=f"two_phase[{formula}]")
-
-    mean = float(_tables.stratified_mean(t))
-    degenerate = bool(((t.counts > 0) & (t.weights > 0)
-                       & (t.counts < 2)).any())
-    if degenerate:
-        msg = ("within-stratum variance needs n_h >= 2 (paper fn.7); "
-               "use collapsed strata for one-unit-per-stratum designs")
-        if strict:
-            raise ValueError(msg)
-        warnings.warn(msg, UserWarning, stacklevel=2)
-    var = float(_tables.two_phase_variance(
-        t, phase1_n, formula=formula, phase1_var=phase1_var))
-
-    n = sum(s.n for s in summaries)
-    df = float(_tables.satterthwaite_df(t))
-    if not np.isfinite(df):
-        df = None
-    return Estimate(mean=mean, variance=var, n=n, df=df,
-                    confidence=confidence, scheme=f"two_phase[{formula}]")
+    return two_phase_estimate_tables(
+        _tables.tables_from_summaries(summaries), phase1_n,
+        phase1_var=phase1_var, confidence=confidence, formula=formula,
+        strict=strict)
 
 
 def phase2_sizes_for_margin(

@@ -17,6 +17,16 @@ from typing import Optional
 import numpy as np
 from scipy import stats as _scipy_stats
 
+__all__ = [
+    "Estimate",
+    "StratumSummary",
+    "critical_value",
+    "critical_values",
+    "apply_coverage_contract",
+    "as_float_array",
+]
+
+
 
 def critical_value(confidence: float, df: Optional[float]) -> float:
     """z- or t- critical value for a two-sided interval.

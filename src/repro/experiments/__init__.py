@@ -5,20 +5,32 @@ configs/seeds/trials, memoized simulation).
 batched-over-app programs (census truth, phase-1 sample, BBV/RFV/DG
 stratifications) on top of one shared ``MemoBank``;
 ``run_sweep(engine, SweepSpec(...))`` and
-``run_trials(engine, TrialSpec(...))`` drive apps × configs × schemes ×
+``run_trials(engine, TrialSpec(...))`` drive apps × configs × plans ×
 Monte-Carlo trials through the batched (optionally app-sharded) paths.
+
+Sampling designs are ``SamplingPlan`` objects
+(``repro.core.sampling.plan``): the engine dispatches on the plan's
+stratifier/policy/estimator components only, so registry plug-ins run
+through ``plan_selection_bank``/``run_sweep`` without engine edits.
+Legacy scheme/policy strings still work as deprecated shims.
 """
 
 from .engine import (NUM_STRATA, PHASE1_SEED, AppExperiment,
-                     ExperimentEngine, SweepStack, scheme_selection,
+                     ExperimentEngine, SweepStack, plan_selection,
+                     plan_selection_bank, scheme_selection,
                      scheme_selection_bank)
-from .montecarlo import TrialResult, TrialSpec, run_trials, trial_uniforms
-from .sweep import ResultsTable, SweepRow, SweepSpec, run_sweep
+from .montecarlo import (SRS_DRAWS, TRIAL_SCHEMES, TrialResult, TrialSpec,
+                         run_trials, trial_uniforms)
+from .sweep import (SRS_SCHEME, ResultsTable, SweepRow, SweepSpec,
+                    known_schemes, run_sweep)
 
 __all__ = [
     "ExperimentEngine", "AppExperiment", "SweepStack",
+    "plan_selection", "plan_selection_bank",
     "scheme_selection", "scheme_selection_bank",
     "SweepSpec", "SweepRow", "ResultsTable", "run_sweep",
+    "SRS_SCHEME", "known_schemes",
     "TrialSpec", "TrialResult", "run_trials", "trial_uniforms",
+    "SRS_DRAWS", "TRIAL_SCHEMES",
     "NUM_STRATA", "PHASE1_SEED",
 ]

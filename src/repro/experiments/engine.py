@@ -38,13 +38,20 @@ import numpy as np
 
 from ..core.clustering import kmeans_bank, kmeans_batch, random_project
 from ..core.sampling import dalenius_gurney_strata, draw_srs
+from ..core.sampling import plan as sampling_plan
 from ..simcpu import (APP_NAMES, CONFIGS, CachedSimulator, MemoBank,
                       config_matrix, cpi_bank, get_population_bank,
                       make_simulator, rfv_bank, stack_ragged)
 
 NUM_STRATA = 20
 PHASE1_SEED = 42
-SCHEMES_STRATIFIED = ("bbv", "rfv", "dg")
+
+__all__ = [
+    "NUM_STRATA", "PHASE1_SEED", "AppExperiment", "SweepStack",
+    "ExperimentEngine", "stratum_tables",
+    "plan_selection", "plan_selection_bank",
+    "scheme_selection", "scheme_selection_bank",
+]
 
 
 @dataclasses.dataclass
@@ -391,88 +398,70 @@ def _project_bank(bbvs: np.ndarray, *, mesh=None):
 
 
 # --------------------------------------------------------------- selection
-def scheme_selection_bank(
-    exps: Sequence[AppExperiment], scheme: str, policy: str, seed: int = 0,
+def plan_selection_bank(
+    exps: Sequence[AppExperiment], plan: sampling_plan.SamplingPlan,
+    seed: int = 0,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Vectorized one-unit-per-stratum selection for a stack of apps.
+
+    THE engine's single selection dispatch site: the plan's stratifier
+    resolves the engine-built artifacts into a stacked ``StratumBank``,
+    ONE stratum-summary dispatch (the ``segment_stats`` kernel contract,
+    via ``build_selection_context``) serves the counts, the mean-policy
+    targets and any baseline-derived centroids, and the plan's policy —
+    a batched callable — picks one unit per stratum. Registry plug-ins
+    (new stratifiers/policies) run through here without any engine edit.
 
     Returns ``(picks, valid, weights)``: (A, L) population indices, an
     (A, L) validity mask (False where the stratum is empty — empty strata
     are masked out of selection entirely, they can't contribute NaN
     centroids or distances), and the (A, L) stratum weights.
     """
-    L = exps[0].num_strata
-    if scheme == "bbv":
-        labels, lv = stack_ragged([e.bbv_labels for e in exps])
-        feats, _ = stack_ragged([e.bbv_feats for e in exps])
-        cents = np.stack([e.bbv_centroids for e in exps])
-        baseline, _ = stack_ragged([e.census(0) for e in exps])
-        pool = None
-        weights = np.stack([e.bbv_weights for e in exps])
-    elif scheme in ("rfv", "dg"):
-        rfv = scheme == "rfv"
-        labels, lv = stack_ragged(
-            [e.rfv_labels if rfv else e.dg_labels for e in exps])
-        baseline, _ = stack_ragged([e.cpi0_1 for e in exps])
-        pool, _ = stack_ragged([e.idx1 for e in exps])
-        weights = np.stack(
-            [e.rfv_weights if rfv else e.dg_weights for e in exps])
-        if rfv:
-            feats, _ = stack_ragged([e.rfv_z for e in exps])
-            cents = np.stack([e.rfv_centroids for e in exps])
-        else:
-            feats = baseline[:, :, None]
-    else:
-        raise ValueError(f"unknown scheme {scheme!r}")
+    bank = plan.stratifier.resolve(exps)
+    ctx = sampling_plan.build_selection_context(
+        bank, seed=seed, summarize=_segment_sums_counts)
+    local = np.asarray(plan.policy(ctx))
+    valid = ctx.counts > 0
+    picks = local if bank.pool is None \
+        else np.take_along_axis(bank.pool, local, axis=1)
+    return np.where(valid, picks, 0), valid, bank.weights
 
-    # ONE stratum-summary dispatch serves counts, the dg stratum-mean
-    # centroids AND the mean-policy targets
-    base_sums, countsf = _segment_sums_counts(labels, lv, L, baseline)
-    base_means = base_sums / np.maximum(countsf, 1)
-    counts = countsf.astype(np.int64)
-    if scheme == "dg":
-        # per-stratum mean baseline CPI; EMPTY strata get a zero
-        # centroid but are masked out of selection below, so no NaN
-        # ever reaches a distance computation
-        cents = base_means[:, :, None]
-    member = (labels[:, :, None] == np.arange(L)[None, None, :]) \
-        & lv[:, :, None]                                   # (A, n, L)
 
-    if policy == "centroid":
-        x2 = (feats ** 2).sum(axis=2)                       # (A, n)
-        c2 = (cents ** 2).sum(axis=2)                       # (A, L)
-        d2 = x2[:, :, None] - 2.0 * np.einsum(
-            "and,ald->anl", feats, cents) + c2[:, None, :]
-        local = np.where(member, d2, np.inf).argmin(axis=1)
-    elif policy == "mean":
-        d = np.abs(baseline[:, :, None] - base_means[:, None, :])
-        local = np.where(member, d, np.inf).argmin(axis=1)
-    elif policy == "random":
-        rng = np.random.default_rng(seed)
-        u = rng.random(counts.shape)                        # (A, L)
-        order, offsets, _ = stratum_tables(labels, lv, L, counts=counts)
-        pos = offsets + np.minimum((u * counts).astype(np.int64),
-                                   np.maximum(counts - 1, 0))
-        # trailing empty strata put offsets at the row width: clamp (the
-        # pick is discarded by the validity mask below)
-        pos = np.minimum(pos, max(order.shape[1] - 1, 0))
-        local = np.take_along_axis(order, pos, axis=1)
-    else:
-        raise ValueError(policy)
+def plan_selection(exp: AppExperiment, plan: sampling_plan.SamplingPlan,
+                   seed: int = 0) -> tuple[list[np.ndarray], np.ndarray]:
+    """Population indices per stratum + weights for one app's plan.
 
-    valid = counts > 0
-    picks = local if pool is None else np.take_along_axis(pool, local, axis=1)
-    return np.where(valid, picks, 0), valid, weights
+    Thin per-app wrapper over ``plan_selection_bank`` so single-app
+    callers and the batched sweep driver share one code path.
+    """
+    picks, valid, weights = plan_selection_bank([exp], plan, seed)
+    sel = [np.asarray([picks[0, h]], np.int64) if valid[0, h]
+           else np.empty(0, np.int64) for h in range(exp.num_strata)]
+    return sel, weights[0]
+
+
+def scheme_selection_bank(
+    exps: Sequence[AppExperiment], scheme: str, policy: str, seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Deprecated string shim over ``plan_selection_bank``.
+
+    Constructs ``SamplingPlan.from_strings(scheme, policy)`` through the
+    registry and dispatches the plan path — identical results, one
+    ``DeprecationWarning``.
+    """
+    sampling_plan.warn_string_dispatch(
+        "scheme_selection_bank",
+        "use plan_selection_bank(exps, SamplingPlan.from_strings(...))")
+    return plan_selection_bank(
+        exps, sampling_plan.SamplingPlan.from_strings(scheme, policy), seed)
 
 
 def scheme_selection(exp: AppExperiment, scheme: str, policy: str,
                      seed: int = 0) -> tuple[list[np.ndarray], np.ndarray]:
-    """Population indices per stratum + weights for a scheme/policy.
-
-    Thin per-app wrapper over ``scheme_selection_bank`` so single-app
-    callers and the batched sweep driver share one code path.
-    """
-    picks, valid, weights = scheme_selection_bank([exp], scheme, policy, seed)
-    sel = [np.asarray([picks[0, h]], np.int64) if valid[0, h]
-           else np.empty(0, np.int64) for h in range(exp.num_strata)]
-    return sel, weights[0]
+    """Deprecated string shim over ``plan_selection`` (see
+    ``scheme_selection_bank`` for the contract)."""
+    sampling_plan.warn_string_dispatch(
+        "scheme_selection",
+        "use plan_selection(exp, SamplingPlan.from_strings(...))")
+    return plan_selection(
+        exp, sampling_plan.SamplingPlan.from_strings(scheme, policy), seed)

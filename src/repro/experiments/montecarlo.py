@@ -37,19 +37,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.sampling import plan as sampling_plan
 from ..core.sampling import tables as sampling_tables
 from ..core.sampling.types import critical_values
 from ..simcpu import APP_NAMES, stack_ragged
 from .engine import ExperimentEngine, stratum_tables
 
+__all__ = ["SRS_DRAWS", "TRIAL_SCHEMES", "TrialSpec", "TrialResult",
+           "run_trials", "trial_key", "trial_uniforms"]
+
+# the plan-less trial scheme: n-unit uniform draws from the census pool
+SRS_DRAWS = "random"
 # canonical scheme order: key derivation is position-based so a scheme's
-# draws are identical no matter which subset a TrialSpec requests
-TRIAL_SCHEMES = ("random", "bbv", "rfv", "dg")
+# draws are identical no matter which subset a TrialSpec requests;
+# registry plug-ins hash their name past this range (trial_key)
+TRIAL_SCHEMES = (SRS_DRAWS, "bbv", "rfv", "dg")
 
 
 @dataclasses.dataclass(frozen=True)
 class TrialSpec:
-    """Monte-Carlo repetition axes for one study configuration."""
+    """Monte-Carlo repetition axes for one study configuration.
+
+    ``schemes`` names the stratifications to study: ``"random"`` (the
+    plan-less SRS reference) plus any *registered* stratifier name
+    (``repro.core.sampling.plan``) — names are validated against the
+    registry at construction, so an unknown scheme fails here rather
+    than mid-study.
+    """
 
     trials: int = 1000
     units_per_trial: int = 20          # SRS draw size (scheme "random")
@@ -59,9 +73,12 @@ class TrialSpec:
     confidence: float = 0.95           # per-trial CI level
 
     def __post_init__(self):
-        unknown = set(self.schemes) - set(TRIAL_SCHEMES)
+        unknown = (set(self.schemes) - {SRS_DRAWS}
+                   - set(sampling_plan.registered_stratifiers()))
         if unknown:
-            raise ValueError(f"unknown trial scheme(s) {sorted(unknown)}")
+            raise ValueError(
+                f"unknown trial scheme(s) {sorted(unknown)}; known: "
+                f"{(SRS_DRAWS,) + sampling_plan.registered_stratifiers()}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,9 +115,16 @@ class TrialResult:
 
 def trial_key(spec: TrialSpec, scheme: str) -> jax.Array:
     """Per-scheme PRNG key; exposed so reference implementations (tests)
-    can reproduce the exact uniforms ``run_trials`` consumes."""
-    return jax.random.fold_in(jax.random.PRNGKey(spec.seed),
-                              TRIAL_SCHEMES.index(scheme))
+    can reproduce the exact uniforms ``run_trials`` consumes.
+
+    Canonical schemes keep their historic fold-in positions; registered
+    plug-in schemes hash their name past the canonical range
+    (``sampling_plan.trial_scheme_index``) so draws never depend on
+    registration order.
+    """
+    return jax.random.fold_in(
+        jax.random.PRNGKey(spec.seed),
+        sampling_plan.trial_scheme_index(scheme, TRIAL_SCHEMES))
 
 
 def trial_uniforms(spec: TrialSpec, scheme: str, num_apps: int,
@@ -185,13 +209,18 @@ def _stratum_key_counts(baseline: np.ndarray, labels: np.ndarray,
 
 def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
                apps: Optional[Sequence[str]] = None,
-               mesh=None) -> TrialResult:
+               mesh=None, stratifiers: Optional[dict] = None) -> TrialResult:
     """Monte-Carlo selection trials for every app in one program per scheme.
 
     No host-side per-app or per-trial loops: each scheme is one vmapped
     (optionally app-sharded) dispatch over the (app, trial, stratum/unit)
     axes — including the per-trial CI half-width and its empirical
     coverage of the census truth (see ``TrialResult``).
+
+    ``stratifiers`` optionally maps scheme names to configured
+    ``Stratifier`` *instances* (``run_sweep`` passes its plan's), so a
+    parameterized plug-in studies the same stratification its sweep
+    used; unmapped schemes are built from the registry with defaults.
     """
     apps = tuple(apps or APP_NAMES)
     exps = engine.build(apps)
@@ -202,10 +231,21 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
     l_n = engine.num_strata
     truth = np.stack([e.truth[ci] for e in exps])
 
+    # registry-resolved stratifications: each scheme name becomes a
+    # Stratifier whose StratumBank declares its labels, weights and
+    # order key — and whose ``pool_kind`` declares the value-pool cost
+    # semantics — no per-scheme branches below
+    strats = {s: (stratifiers or {}).get(s)
+              or sampling_plan.make_stratifier(s)
+              for s in spec.schemes if s != SRS_DRAWS}
+    banks = {s: strat.resolve(exps) for s, strat in strats.items()}
+    charged = {s for s, strat in strats.items()
+               if strat.pool_kind == "phase1"}
+
     # value pools: census CPI (free) and phase-1 CPI (charged once)
     census, _ = stack_ragged([e.census(ci) for e in exps], dtype=np.float32)
     p1_pool = None
-    if any(s in ("rfv", "dg") for s in spec.schemes):
+    if charged:
         cpi, _ = engine.memo.fill(stack.rows, stack.idx1, stack.idx1_valid,
                                   (cfg,),
                                   feats=stack.gather_feats(stack.idx1),
@@ -217,7 +257,7 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
     halves: dict[str, np.ndarray] = {}
     coverage: dict[str, np.ndarray] = {}
     for scheme in spec.schemes:
-        if scheme == "random":
+        if scheme == SRS_DRAWS:
             n = spec.units_per_trial
             dfs = np.full(len(apps), float(n - 1) if n < 30 else np.inf)
             crit = critical_values(spec.confidence, dfs).astype(np.float32)
@@ -226,22 +266,16 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
                 _srs_trials, _srs_trials_jit, mesh,
                 u, census, stack.n_regions, truth, crit)
         else:
-            if scheme == "bbv":
-                labels, lv = stack_ragged([e.bbv_labels for e in exps])
-                pool, weights = census, np.stack(
-                    [e.bbv_weights for e in exps])
-                baseline, _ = stack_ragged([e.census(0) for e in exps],
-                                           dtype=np.float32)
-            else:
-                labels, lv = stack_ragged(
-                    [e.rfv_labels if scheme == "rfv" else e.dg_labels
-                     for e in exps])
+            bank = banks[scheme]
+            labels, lv = bank.labels, bank.valid
+            weights = bank.weights
+            if scheme in charged:                 # phase-1 pool, paid once
                 pool = p1_pool
-                weights = np.stack(
-                    [e.rfv_weights if scheme == "rfv" else e.dg_weights
-                     for e in exps])
-                baseline, _ = stack_ragged([e.cpi0_1 for e in exps],
-                                           dtype=np.float32)
+            elif bank.pool is None:               # census-indexed labels
+                pool = census
+            else:                                 # census values at pool idx
+                pool = np.take_along_axis(census, bank.pool, axis=1)
+            baseline = bank.baseline.astype(np.float32)
             # ONE stratum-summary dispatch serves the collapsed-pairs
             # ordering key AND the gather-table counts
             key, countsf = _stratum_key_counts(baseline, labels, lv, l_n)

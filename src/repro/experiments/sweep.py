@@ -27,21 +27,45 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from ..core.sampling import plan as sampling_plan
 from ..core.sampling import tables as sampling_tables
 from ..core.sampling.types import critical_values
 from ..simcpu import APP_NAMES
-from .engine import ExperimentEngine, scheme_selection_bank
+from .engine import ExperimentEngine, plan_selection_bank
 
-SCHEMES = ("srs", "bbv", "rfv", "dg")
+__all__ = ["SRS_SCHEME", "SweepSpec", "SweepRow", "ResultsTable",
+           "run_sweep", "known_schemes"]
+
+# the one structurally-special scheme: the phase-1 simple random sample
+# (no stratification, no plan) — everything else is a SamplingPlan
+SRS_SCHEME = "srs"
+
+
+def known_schemes() -> tuple[str, ...]:
+    """Scheme names ``SweepSpec`` accepts: ``"srs"`` plus every
+    registered stratifier (``repro.core.sampling.plan``)."""
+    return (SRS_SCHEME,) + sampling_plan.registered_stratifiers()
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
-    """One sweep = apps × configs for a single scheme/policy."""
+    """One sweep = apps × configs for a single sampling plan.
+
+    The modern spelling passes a ``SamplingPlan``
+    (``SweepSpec(plan=SamplingPlan(RFVClusters(), Centroid()))``);
+    ``scheme``/``policy`` then carry the plan's registered names as row
+    labels. The legacy string spelling
+    (``SweepSpec(scheme="rfv", policy="centroid")``) still works: it
+    resolves the names through the plan registry *at construction* —
+    unknown names raise here, not deep inside the engine — and emits a
+    ``DeprecationWarning``. ``scheme="srs"`` is the plan-less phase-1
+    estimate.
+    """
 
     apps: tuple[str, ...] = tuple(APP_NAMES)
-    scheme: str = "srs"                      # "srs" | "bbv" | "rfv" | "dg"
-    policy: Optional[str] = None             # selection policy (non-srs)
+    scheme: str = SRS_SCHEME                 # row label / legacy name
+    policy: Optional[str] = None             # row label / legacy name
+    plan: Optional[sampling_plan.SamplingPlan] = None
     config_indices: Optional[tuple[int, ...]] = None   # None = all engine configs
     selection_seed: int = 0                  # rng seed for policy="random"
     # optional Monte-Carlo study riding along (see experiments.montecarlo):
@@ -49,10 +73,34 @@ class SweepSpec:
     trials: Optional["TrialSpec"] = None     # noqa: F821
 
     def __post_init__(self):
-        if self.scheme not in SCHEMES:
-            raise ValueError(f"unknown scheme {self.scheme!r}")
-        if self.scheme != "srs" and self.policy is None:
-            object.__setattr__(self, "policy", "centroid")
+        if self.plan is not None:
+            # a stale scheme/policy string alongside plan= must not be
+            # silently relabeled: either omit it or make it agree
+            if self.scheme not in (SRS_SCHEME, self.plan.scheme) \
+                    or self.policy not in (None, self.plan.policy_name):
+                raise ValueError(
+                    f"scheme={self.scheme!r}/policy={self.policy!r} "
+                    f"conflict with plan="
+                    f"({self.plan.scheme!r}, {self.plan.policy_name!r}); "
+                    "drop the strings when passing plan=")
+            object.__setattr__(self, "scheme", self.plan.scheme)
+            object.__setattr__(self, "policy", self.plan.policy_name)
+        elif self.scheme != SRS_SCHEME:
+            sampling_plan.warn_string_dispatch(
+                "SweepSpec(scheme=..., policy=...)",
+                "pass SweepSpec(plan=SamplingPlan.from_strings(...))")
+            # registry lookup validates both names at spec construction;
+            # aliases (e.g. "cpi") normalize to the canonical name so
+            # row labels always match plan.scheme
+            object.__setattr__(self, "plan", sampling_plan.SamplingPlan
+                               .from_strings(self.scheme,
+                                             self.policy or "centroid"))
+            object.__setattr__(self, "scheme", self.plan.scheme)
+            object.__setattr__(self, "policy", self.plan.policy_name)
+        elif self.policy is not None:
+            raise ValueError(
+                "scheme='srs' takes no selection policy (phase-1 SRS has "
+                "no strata to select from)")
         if (self.trials is not None and self.config_indices is not None
                 and self.trials.config_index not in self.config_indices):
             raise ValueError(
@@ -102,8 +150,14 @@ class ResultsTable:
         return np.asarray([getattr(r, field) for r in self.rows])
 
     def matrix(self, field: str = "estimate") -> np.ndarray:
-        """(C, A) matrix of ``field`` over config × app, in spec order."""
-        configs = sorted({r.config_index for r in self.rows})
+        """(C, A) matrix of ``field`` over config × app, in spec order.
+
+        Both axes follow first appearance in the rows — i.e. the order
+        of ``SweepSpec.apps`` / ``config_indices`` — so an unsorted
+        ``config_indices`` keeps its caller-chosen row order instead of
+        being silently re-sorted.
+        """
+        configs = list(dict.fromkeys(r.config_index for r in self.rows))
         apps = list(dict.fromkeys(r.app for r in self.rows))
         out = np.full((len(configs), len(apps)), np.nan)
         ci = {c: i for i, c in enumerate(configs)}
@@ -145,7 +199,15 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
               mesh=None) -> ResultsTable:
     """Execute one sweep: ONE batched (optionally app-sharded) dispatch
     over all apps × requested configs (only those are simulated and
-    ledger-charged)."""
+    ledger-charged).
+
+    Stratified sweeps dispatch on ``spec.plan`` only — selection via
+    ``plan_selection_bank`` and estimation via the plan estimator's
+    jitted ``StratumTables`` program (``sampling_plan
+    .last_sweep_dispatch`` records it), so estimates and percent errors
+    come off-device ready-made; no host-side weighted-mean reduction
+    remains on the path.
+    """
     exps = engine.build(spec.apps)
     stack = engine.stack(spec.apps)
     mesh = engine.mesh if mesh is None else mesh
@@ -154,15 +216,16 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
     cfgs = tuple(engine.configs[i] for i in cfg_is)
     truth = np.stack([e.truth for e in exps])[:, list(cfg_is)]   # (A, C')
 
-    if spec.scheme == "srs":
+    if spec.plan is None:                                # phase-1 SRS
         cpi, _ = engine.memo.fill(stack.rows, stack.idx1, stack.idx1_valid,
                                   cfgs, feats=stack.gather_feats(stack.idx1),
                                   mesh=mesh)
         ests, margins = _srs_stats(cpi, stack.idx1_valid)
+        errs = 100.0 * np.abs(ests - truth) / truth
         n_units = stack.idx1_valid.sum(axis=1)
     else:
-        picks, valid, weights = scheme_selection_bank(
-            exps, spec.scheme, spec.policy, seed=spec.selection_seed)
+        picks, valid, weights = plan_selection_bank(
+            exps, spec.plan, seed=spec.selection_seed)
         cpi, _ = engine.memo.fill(stack.rows, picks, valid, cfgs,
                                   feats=stack.gather_feats(picks), mesh=mesh)
         covered = np.where(valid, weights, 0.0).sum(axis=1)      # (A,)
@@ -175,19 +238,21 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
                 f"selected units cover only part of the stratum weight for "
                 f"{bad}; renormalizing biases those estimates",
                 UserWarning, stacklevel=2)
-        w = np.where(valid, weights, 0.0)
-        ests = (cpi * w[:, None, :]).sum(axis=2) / covered[:, None]
+        ests, errs = spec.plan.estimator.sweep_estimates(
+            cpi, valid, weights, truth)
         margins = None
         n_units = valid.sum(axis=1)
 
     p95 = ci_half = cov = None
     if spec.trials is not None:
-        from .montecarlo import run_trials
-        mc_scheme = "random" if spec.scheme == "srs" else spec.scheme
+        from .montecarlo import SRS_DRAWS, run_trials
+        mc_scheme = SRS_DRAWS if spec.plan is None else spec.scheme
+        strats = None if spec.plan is None \
+            else {mc_scheme: spec.plan.stratifier}
         mc = run_trials(engine,
                         dataclasses.replace(spec.trials,
                                             schemes=(mc_scheme,)),
-                        apps=spec.apps, mesh=mesh)
+                        apps=spec.apps, mesh=mesh, stratifiers=strats)
         p95 = mc.p95(mc_scheme)
         mc_truth = np.stack(
             [e.truth[spec.trials.config_index] for e in exps])
@@ -197,13 +262,12 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
     rows: list[SweepRow] = []
     for a, name in enumerate(spec.apps):
         for pos, ci in enumerate(cfg_is):
-            est, tr = float(ests[a, pos]), float(truth[a, pos])
             at_trial_cfg = (spec.trials is not None
                             and spec.trials.config_index == ci)
             rows.append(SweepRow(
                 app=name, scheme=spec.scheme, config_index=ci,
-                estimate=est, truth=tr,
-                err_pct=100.0 * abs(est - tr) / tr,
+                estimate=float(ests[a, pos]), truth=float(truth[a, pos]),
+                err_pct=float(errs[a, pos]),
                 n_units=int(n_units[a]),
                 margin_pct=(float(margins[a, pos])
                             if margins is not None else None),

@@ -18,8 +18,10 @@ import numpy as np
 import pytest
 
 from repro.core.clustering import kmeans_bank
+from repro.core.sampling import (Centroid, DaleniusGurney, RandomUnit,
+                                 SamplingPlan)
 from repro.experiments import (ExperimentEngine, SweepSpec, TrialSpec,
-                               run_sweep, run_trials, scheme_selection,
+                               plan_selection, run_sweep, run_trials,
                                trial_uniforms)
 from repro.simcpu import (CONFIGS, MemoBank, cpi_bank, evaluate_regions,
                           get_population_bank, make_cached_simulator)
@@ -257,7 +259,8 @@ def test_dg_selection_masks_empty_strata(engine):
             minlength=exp.num_strata) / exp.dg_labels.size)
     with warnings.catch_warnings():
         warnings.simplefilter("error")       # NaN ops would warn
-        sel, w = scheme_selection(crafted, "dg", "centroid")
+        sel, w = plan_selection(crafted,
+                                SamplingPlan(DaleniusGurney(), Centroid()))
     assert sel[3].size == 0                  # masked out, not NaN-selected
     assert sum(s.size for s in sel) == exp.num_strata - 1
     assert np.isfinite(w).all()
@@ -273,7 +276,9 @@ def test_random_selection_with_trailing_empty_stratum(engine):
         exp, dg_labels=relabeled,
         dg_weights=np.bincount(relabeled, minlength=exp.num_strata)
         / relabeled.size)
-    sel, w = scheme_selection(crafted, "dg", "random", seed=11)
+    sel, w = plan_selection(crafted,
+                            SamplingPlan(DaleniusGurney(), RandomUnit()),
+                            seed=11)
     assert sel[last].size == 0
     assert sum(s.size for s in sel) == exp.num_strata - 1
     for h, s in enumerate(sel):
