@@ -59,7 +59,12 @@ def _jsonable(obj):
 def write_results_json(benches: dict, claims: dict, ok: bool,
                        errors: list, total_s: float,
                        path: pathlib.Path = RESULTS_PATH) -> None:
-    """Dump the machine-readable run record (the cross-PR perf ledger)."""
+    """Dump the machine-readable run record (the cross-PR perf ledger).
+
+    Merges into an existing ledger: a partial run (``--only``) updates
+    its own bench/claim rows and leaves the rest in place, so a targeted
+    rerun never erases the full-suite record. ``overall_pass`` reflects
+    only the rows this run validated."""
     payload = {
         "benches": _jsonable(benches),
         "claims": _jsonable(claims),
@@ -67,6 +72,15 @@ def write_results_json(benches: dict, claims: dict, ok: bool,
         "errors": list(errors),
         "total_seconds": round(total_s, 2),
     }
+    if path.exists():
+        try:
+            prior = json.loads(path.read_text())
+            payload["benches"] = {**prior.get("benches", {}),
+                                  **payload["benches"]}
+            payload["claims"] = {**prior.get("claims", {}),
+                                 **payload["claims"]}
+        except (json.JSONDecodeError, AttributeError):
+            pass                      # corrupt ledger: rewrite from scratch
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"# results written to {path.name}")
 
@@ -80,14 +94,20 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=None,
                     help="force N XLA host devices (app-sharded sweeps); "
                     "must be set before jax initializes")
+    ap.add_argument("--trials", type=int, default=None,
+                    help="largest Monte-Carlo trial count for the "
+                    "streaming trials bench (default 100000, or 10000 "
+                    "with --quick)")
     args = ap.parse_args()
 
     if args.devices is not None:
         _force_devices(args.devices)
 
     from . import (estimators_bench, kernels_bench, kmeans_batched_bench,
-                   paper_figs)
+                   paper_figs, trials_bench)
 
+    max_trials = args.trials if args.trials is not None \
+        else (10_000 if args.quick else 100_000)
     benches = {
         "fig1_cpi_distributions": paper_figs.bench_cpi_distributions,
         "fig5_config_sweep": paper_figs.bench_config_sweep,
@@ -105,6 +125,8 @@ def main() -> None:
         "kernels": kernels_bench.bench_kernels,
         "kmeans_batched": kmeans_batched_bench.bench_kmeans_batched,
         "estimators": estimators_bench.bench_estimators,
+        "trials_streaming": (lambda: trials_bench.bench_trials_streaming(
+            trials=max_trials, quick=args.quick)),
     }
     if args.only:
         names = args.only.split(",")
@@ -199,6 +221,23 @@ def main() -> None:
               f"(gate {sweep_bound:g}), "
               f"{re_['sweep_speedup']:.2f}x host/device, "
               f"x64={re_['sweep_x64']}")
+
+    rtr = results.get("trials_streaming")
+    if rtr:
+        check("streaming_chunked_bitwise", rtr["chunked_bitwise"],
+              "chunked scan == unchunked bitwise at 1000 trials "
+              "(per-block PRNG contract)")
+        worst = min(rtr["coverage"].values())
+        check("streaming_coverage_calibrated", worst >= 0.90,
+              f"worst calibrated-scheme coverage {worst:.3f} at "
+              f"{rtr['max_trials']} trials (gate 0.90, nominal 0.95, "
+              "f32 accumulators)")
+        scale_floor = 10_000 if rtr.get("quick") else 100_000
+        top = rtr["rows"][-1]
+        check("streaming_trials_scale", rtr["max_trials"] >= scale_floor,
+              f"{top['trials']} trials streamed in {top['seconds']}s "
+              f"({top['trials_per_sec']:,.0f} trial-lanes/s, "
+              f"{top['devices']} device(s), bounded memory)")
 
     # a bench that crashed is a failure even if no claim row references it
     check("no_bench_errors", not errors,

@@ -37,3 +37,9 @@ python -m pytest -x -q
 # bench smoke; the `estimators` leg gates the batched-vs-scalar claim row
 # (benchmarks/run.py exits non-zero on any FAILing claim)
 python -m benchmarks.run --quick --only fig5_config_sweep,kernels,kmeans_batched,estimators
+
+# scaled-trials smoke: a chunked 10^4-trial streamed run through the
+# trial engine (keep_trials off -> bounded memory), gating the
+# chunked==unchunked bitwise and coverage-calibration claim rows; under
+# CI_FORCE_DEVICES=8 the ("app","trial") mesh reduction runs for real
+python -m benchmarks.run --quick --trials 10000 --only trials_streaming

@@ -12,6 +12,7 @@ without engine edits.
 """
 
 from . import plan, tables
+from ..precision import DEFAULT_PRECISION, PrecisionPolicy, resolve_precision
 from .allocation import (neyman_allocation, proportional_allocation,
                          required_total_neyman, required_total_proportional)
 from .collapsed import collapsed_strata_estimate
@@ -30,7 +31,10 @@ from .stratified import (StratumSummary, satterthwaite_df,
                          stratified_estimate,
                          stratified_estimate_from_samples, stratified_mean,
                          stratified_variance, summarize_strata)
-from .tables import StratumTables, stratum_tables, tables_from_summaries
+from .tables import (StratumTables, TrialStats, log_hist_quantile,
+                     stratum_tables, tables_from_summaries,
+                     trial_stats_init, trial_stats_merge,
+                     trial_stats_update)
 from .two_phase import (phase2_sizes_for_margin, two_phase_estimate,
                         two_phase_estimate_tables)
 from .types import (Estimate, apply_coverage_contract, critical_value,
@@ -61,4 +65,8 @@ __all__ = [
     "register_stratifier", "register_policy",
     "registered_stratifiers", "registered_policies",
     "make_stratifier", "make_policy",
+    # precision policy + streaming trial statistics
+    "PrecisionPolicy", "DEFAULT_PRECISION", "resolve_precision",
+    "TrialStats", "trial_stats_init", "trial_stats_update",
+    "trial_stats_merge", "log_hist_quantile",
 ]

@@ -682,14 +682,17 @@ def _weighted_point_program(cpi, valid, weights, truth):
 
 
 def _x64_sweep_programs() -> bool:
-    """Whether sweep-estimate programs run in float64.
+    """Whether the default sweep-estimate policy runs in float64.
 
-    The f64-on-accelerator policy: CPU hosts trace the program under
+    Delegates to ``PrecisionPolicy.host_parity`` — the ONE precision
+    policy (``repro.core.precision``): CPU hosts trace the program under
     ``jax.experimental.enable_x64`` so on-device estimates match the
     historic float64 host reduction to rounding; TPU backends (no
     native f64) keep the default float32.
     """
-    return jax.default_backend() != "tpu"
+    from ..precision import PrecisionPolicy
+
+    return PrecisionPolicy.host_parity().needs_x64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -704,30 +707,32 @@ class Estimator:
 
     name: ClassVar[str] = "weighted_point"
 
-    def sweep_estimates(self, cpi, valid, weights, truth
-                        ) -> tuple[np.ndarray, np.ndarray]:
+    def sweep_estimates(self, cpi, valid, weights, truth, *,
+                        precision=None) -> tuple[np.ndarray, np.ndarray]:
         """(A, C) estimates + percent errors from one jitted dispatch.
 
         ``cpi``: (A, C, L) per-stratum selected-unit CPI; ``valid``:
         (A, L) pick validity; ``weights``: (A, L); ``truth``: (A, C).
         The reduction runs on device via the ``StratumTables`` program —
         no host-side weighted mean — and records the dispatch marker.
+        ``precision`` overrides the default ``PrecisionPolicy``
+        (``host_parity``: f64 trace off-TPU so device estimates match
+        the numpy reference, f32 on TPU).
         """
+        from ..precision import PrecisionPolicy
+
         global _last_sweep_dispatch
-        x64 = _x64_sweep_programs()
-        dt = np.float64 if x64 else np.float32
+        pp = precision if precision is not None \
+            else PrecisionPolicy.host_parity()
+        dt = pp.trace_dtype
         args = (np.asarray(cpi, dt), np.asarray(valid, bool),
                 np.asarray(weights, dt), np.asarray(truth, dt))
-        if x64:
-            from jax.experimental import enable_x64
-            with enable_x64(True):
-                est, err = _weighted_point_program(*args)
-        else:
+        with pp.x64_context():
             est, err = _weighted_point_program(*args)
         _last_sweep_dispatch = {
             "batch_shape": tuple(np.shape(cpi)[:-1]),
             "num_strata": int(np.shape(cpi)[-1]),
-            "x64": x64, "backend": jax.default_backend(),
+            "x64": pp.needs_x64, "backend": jax.default_backend(),
         }
         return np.asarray(est), np.asarray(err)
 

@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..precision import PrecisionPolicy, resolve_precision
+
 __all__ = [
     "StratumTables",
     "stratum_tables",
@@ -53,6 +55,15 @@ __all__ = [
     "proportional_allocation",
     "neyman_allocation",
     "masked_srs_stats",
+    # streaming trial statistics (the chunked Monte-Carlo accumulator)
+    "TRIAL_HIST_BINS",
+    "TRIAL_HIST_LO",
+    "TRIAL_HIST_HI",
+    "TrialStats",
+    "trial_stats_init",
+    "trial_stats_update",
+    "trial_stats_merge",
+    "log_hist_quantile",
 ]
 
 
@@ -152,6 +163,7 @@ def stratum_tables(
     valid=None,
     backend: str = "numpy",
     validate: bool = True,
+    precision: Optional[PrecisionPolicy] = None,
 ) -> StratumTables:
     """Build ``StratumTables`` from samples + stratum labels, batched.
 
@@ -166,21 +178,25 @@ def stratum_tables(
         range does not determine it; defaults to ``weights.shape[-1]``.
       valid: optional bool mask aligned with ``y`` (ANDed with
         ``labels >= 0``).
-      backend: ``"numpy"`` — exact float64 host path (the scalar-parity
-        reference); ``"auto"``/``"pallas"``/``"jnp"`` — the
-        ``segment_stats`` kernel contract (kernel on TPU, jnp oracle
-        off-TPU, float32).
+      backend: ``"numpy"`` — exact host path in the policy's host dtype
+        (the scalar-parity reference); ``"auto"``/``"pallas"``/``"jnp"``
+        — the ``segment_stats`` kernel contract (kernel on TPU, jnp
+        oracle off-TPU) computing in the policy's trace dtype.
       validate: check label range and weight normalization (numpy path
         only; device paths are jit-safe and skip data-dependent checks).
+      precision: the ``PrecisionPolicy`` governing dtypes on both paths
+        (default: ``DEFAULT_PRECISION`` — f32 trace, f64 host).
     """
+    pp = resolve_precision(precision)
     if backend == "numpy":
         return _stratum_tables_np(y, labels, weights=weights,
                                   num_strata=num_strata, valid=valid,
-                                  validate=validate)
+                                  validate=validate, dtype=pp.host_dtype)
     from repro.kernels.segment_stats.ops import segment_stats
 
+    dt = pp.trace_dtype
     labels = jnp.asarray(labels, jnp.int32)
-    y = jnp.asarray(y, jnp.float32)
+    y = jnp.asarray(y, dt)
     if valid is not None:
         labels = jnp.where(jnp.asarray(valid, bool), labels, -1)
     if num_strata is None:
@@ -193,24 +209,25 @@ def stratum_tables(
     # float32 sumsqs keep significant bits when |ȳ| ≫ s (the masked rows
     # carry label -1 and contribute nothing either way)
     ok = (labels >= 0) & (labels < L)
-    n_ok = jnp.maximum(ok.sum(axis=-1), 1).astype(jnp.float32)
+    n_ok = jnp.maximum(ok.sum(axis=-1), 1).astype(dt)
     shift = jnp.where(ok, y, 0.0).sum(axis=-1) / n_ok
     sums, sumsqs, counts = segment_stats(y - shift[..., None], labels, L,
-                                         backend=backend)
+                                         backend=backend, precision=pp)
     sums, sumsqs = sums[..., 0], sumsqs[..., 0]
     if weights is None:
         total = jnp.maximum(counts.sum(axis=-1, keepdims=True), 1.0)
         w = counts / total
     else:
-        w = jnp.broadcast_to(jnp.asarray(weights, jnp.float32), counts.shape)
+        w = jnp.broadcast_to(jnp.asarray(weights, dt), counts.shape)
     return StratumTables(counts=counts, sums=sums, sumsqs=sumsqs, weights=w,
                          shift=shift)
 
 
 def _stratum_tables_np(y, labels, *, weights, num_strata, valid,
-                       validate) -> StratumTables:
-    """Exact float64 host constructor (vectorized offset-bincount)."""
-    yv = np.asarray(y, np.float64)
+                       validate, dtype=np.float64) -> StratumTables:
+    """Exact host constructor (vectorized offset-bincount) in the policy's
+    host dtype (float64 by default — the scalar-parity reference)."""
+    yv = np.asarray(y, dtype)
     lab = np.asarray(labels)
     if yv.shape != lab.shape:
         raise ValueError(f"y shape {yv.shape} != labels shape {lab.shape}")
@@ -523,7 +540,9 @@ def proportional_allocation(weights, n_total, *, min_per_stratum: int = 2):
     as the scalar reference (overshoot accepted when minima force it).
     """
     xp = _ns(weights)
-    w = xp.asarray(weights, dtype=np.float64 if xp is np else jnp.float32)
+    # host lanes promote to f64 (the exact reference); device lanes keep
+    # the caller's trace dtype (f32 default, f64 under an x64 policy)
+    w = xp.asarray(weights, np.float64) if xp is np else xp.asarray(weights)
     nt = xp.asarray(n_total)
     raw = w * (nt[..., None] if nt.ndim else nt)
     n_h = xp.maximum(xp.floor(raw).astype(int), min_per_stratum)
@@ -589,3 +608,191 @@ def masked_srs_stats(x, valid):
     s2 = xp.where(n > 1, ss / xp.maximum(n - 1.0, 1.0), xp.nan)
     mean = xp.where(n > 0, mean, xp.nan)
     return mean, s2 / safe_n, n
+
+
+# ----------------------------------------------- streaming trial statistics
+# Log-histogram sketch grid shared by every TrialStats: 4096 bins over
+# [1e-6, 1e6) gives ~0.68% relative resolution — far below the Monte-Carlo
+# noise of any quantile read from it. Percent errors and absolute CI
+# half-widths both live comfortably inside this range; out-of-range values
+# clip into the edge bins.
+TRIAL_HIST_BINS = 4096
+TRIAL_HIST_LO = 1e-6
+TRIAL_HIST_HI = 1e6
+_HIST_LOG_LO = float(np.log(TRIAL_HIST_LO))
+_HIST_LOG_SPAN = float(np.log(TRIAL_HIST_HI) - np.log(TRIAL_HIST_LO))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialStats:
+    """Streaming-accumulable Monte-Carlo trial statistics, batched.
+
+    Every leaf is *additive*: chunk updates, cross-chunk scan carries and
+    cross-device ``psum`` merges are all elementwise sums, so any
+    chunking or sharding of the trial axis accumulates to the same
+    totals — bitwise for the integer leaves (trial counts, coverage
+    counts, histogram sketches) and up to float summation order for the
+    moment sums. Leading axes (``...``) are batch lanes (apps); per-trial
+    ``T``-axis arrays never materialize.
+
+    ``err_hist``/``half_hist`` are log-spaced histogram sketches over
+    ``[TRIAL_HIST_LO, TRIAL_HIST_HI)``; quantile readouts (the Fig 8
+    p95) come from ``log_hist_quantile``. Registered as a jax pytree so
+    the stats ride a ``lax.scan`` carry and cross ``shard_map``
+    boundaries.
+    """
+
+    count: np.ndarray | jax.Array      # (...,) valid trials accumulated
+    cover: np.ndarray | jax.Array      # (...,) trials whose CI covered truth
+    err_sum: np.ndarray | jax.Array    # (...,) Σ pct |error|   (accum dtype)
+    err_sumsq: np.ndarray | jax.Array  # (...,) Σ pct |error|²
+    half_n: np.ndarray | jax.Array     # (...,) trials with finite half-width
+    half_sum: np.ndarray | jax.Array   # (...,) Σ CI half-width
+    half_sumsq: np.ndarray | jax.Array  # (...,) Σ half-width²
+    err_hist: np.ndarray | jax.Array   # (..., B) log-bucketed error counts
+    half_hist: np.ndarray | jax.Array  # (..., B) log-bucketed half counts
+
+    # host-side readouts -----------------------------------------------
+    @property
+    def coverage(self):
+        """(...) empirical coverage: covered / valid trials (NaN if 0)."""
+        xp = _ns(self.count)
+        denom = xp.maximum(self.count, 1).astype(np.float64)
+        return xp.where(self.count > 0, self.cover / denom, xp.nan)
+
+    @property
+    def err_mean(self):
+        """(...) mean percent |error| over trials with finite error."""
+        xp = _ns(self.count)
+        n = self.err_hist.sum(axis=-1)
+        return xp.where(n > 0, self.err_sum / xp.maximum(n, 1), xp.nan)
+
+    @property
+    def half_mean(self):
+        """(...) mean CI half-width over trials with a finite interval
+        (the streamed analogue of ``nanmean`` over per-trial widths)."""
+        xp = _ns(self.count)
+        return xp.where(self.half_n > 0,
+                        self.half_sum / xp.maximum(self.half_n, 1), xp.nan)
+
+    def err_quantile(self, q: float):
+        """(...) q-quantile of percent |error| from the sketch (host)."""
+        return log_hist_quantile(self.err_hist, q)
+
+    def half_quantile(self, q: float):
+        """(...) q-quantile of the CI half-width from the sketch (host)."""
+        return log_hist_quantile(self.half_hist, q)
+
+
+jax.tree_util.register_pytree_node(
+    TrialStats,
+    lambda s: ((s.count, s.cover, s.err_sum, s.err_sumsq, s.half_n,
+                s.half_sum, s.half_sumsq, s.err_hist, s.half_hist), None),
+    lambda _, leaves: TrialStats(*leaves))
+
+
+def trial_stats_init(batch_shape, *, bins: int = TRIAL_HIST_BINS,
+                     accum_dtype=np.float32, xp=np) -> TrialStats:
+    """Zeroed accumulator for ``batch_shape`` lanes (the scan carry init).
+
+    ``accum_dtype`` is the float-moment dtype (``PrecisionPolicy.accum``);
+    the counters and sketches are int32 regardless — they are exact in
+    any policy.
+    """
+    bs = tuple(batch_shape)
+    zi = xp.zeros(bs, np.int32)
+    zf = xp.zeros(bs, accum_dtype)
+    zh = xp.zeros(bs + (int(bins),), np.int32)
+    return TrialStats(count=zi, cover=zi, err_sum=zf, err_sumsq=zf,
+                      half_n=zi, half_sum=zf, half_sumsq=zf,
+                      err_hist=zh, half_hist=zh)
+
+
+def _log_bucket(x, xp, bins: int):
+    """Histogram bin index of ``x`` on the shared log grid (clipped)."""
+    pos = xp.isfinite(x) & (x > 0)
+    safe = xp.where(pos, x, TRIAL_HIST_LO)
+    b = xp.floor((xp.log(safe) - _HIST_LOG_LO) * (bins / _HIST_LOG_SPAN))
+    return xp.clip(b, 0, bins - 1).astype(np.int32)
+
+
+def _hist_add(hist, values, mask, xp):
+    """``hist + histogram(values[mask])`` lane-wise, namespace-agnostic.
+
+    Lanes are flattened into one offset-bincount / scatter-add so a whole
+    chunk folds in with a single dispatch (mirrors the flat-segment trick
+    of ``_stratum_tables_np``).
+    """
+    bins = hist.shape[-1]
+    lead = hist.shape[:-1]
+    lanes = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    t = values.shape[-1]
+    idx = _log_bucket(values, xp, bins).reshape(lanes, t)
+    flat = (idx + bins * xp.arange(lanes, dtype=np.int32)[:, None]).reshape(-1)
+    w = xp.broadcast_to(mask, values.shape).reshape(-1).astype(np.int32)
+    if xp is np:
+        add = np.bincount(flat, weights=w,
+                          minlength=lanes * bins).astype(np.int32)
+    else:
+        add = jnp.zeros(lanes * bins, jnp.int32).at[flat].add(w)
+    return hist + add.reshape(hist.shape)
+
+
+def trial_stats_update(stats: TrialStats, err, half, covered,
+                       valid) -> TrialStats:
+    """Fold one chunk of per-trial outcomes into the running statistics.
+
+    ``err``/``half`` are ``(..., Tc)`` per-trial chunk outcomes,
+    ``covered`` the per-trial CI-covers-truth booleans, and ``valid``
+    a broadcastable mask dropping padding trials (the chunk grid rounds
+    the trial count up). Float moments are cast to the accumulator dtype
+    *before* summing; counters stay int32 (exact, order-independent —
+    the bitwise half of the chunked == unchunked contract).
+    """
+    xp = _ns(stats.count, err)
+    v = xp.broadcast_to(xp.asarray(valid, bool), err.shape)
+    acc = stats.err_sum.dtype
+    err_ok = v & xp.isfinite(err)
+    half_ok = v & xp.isfinite(half)
+
+    def moments(x, m):
+        xc = xp.where(m, x, 0).astype(acc)
+        return xc.sum(axis=-1), (xc * xc).sum(axis=-1)
+
+    err_s, err_ss = moments(err, err_ok)
+    half_s, half_ss = moments(half, half_ok)
+    return TrialStats(
+        count=stats.count + v.sum(axis=-1).astype(np.int32),
+        cover=stats.cover + (v & covered).sum(axis=-1).astype(np.int32),
+        err_sum=stats.err_sum + err_s,
+        err_sumsq=stats.err_sumsq + err_ss,
+        half_n=stats.half_n + half_ok.sum(axis=-1).astype(np.int32),
+        half_sum=stats.half_sum + half_s,
+        half_sumsq=stats.half_sumsq + half_ss,
+        err_hist=_hist_add(stats.err_hist, err, err_ok, xp),
+        half_hist=_hist_add(stats.half_hist, half, half_ok, xp))
+
+
+def trial_stats_merge(a: TrialStats, b: TrialStats) -> TrialStats:
+    """Merge two partial accumulations (host-side analogue of the
+    in-program ``psum`` over the trial mesh axis)."""
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def log_hist_quantile(hist, q: float):
+    """(...) quantile readout from a log-histogram sketch (host, numpy).
+
+    Returns the geometric center of the bin holding the q-th order
+    statistic; NaN for empty lanes. Accurate to one bin width (~0.68%
+    relative at the default grid) plus the gap between neighboring order
+    statistics — the parity test vs ``np.percentile`` on the dense path
+    bounds both.
+    """
+    h = np.asarray(hist, np.float64)
+    bins = h.shape[-1]
+    tot = h.sum(axis=-1)
+    cum = np.cumsum(h, axis=-1)
+    idx = np.argmax(cum >= q * tot[..., None], axis=-1)
+    centers = np.exp(_HIST_LOG_LO
+                     + (np.arange(bins) + 0.5) * (_HIST_LOG_SPAN / bins))
+    return np.where(tot > 0, centers[idx], np.nan)

@@ -17,6 +17,7 @@ only stratum weights (shaped by phase 1) and phase-2 data enter.
 
 from __future__ import annotations
 
+import functools
 import warnings
 from typing import Optional, Sequence
 
@@ -108,6 +109,35 @@ def two_phase_estimate(
         strict=strict)
 
 
+@functools.lru_cache(maxsize=None)
+def _sizing_program(allocation: str, min_per_stratum: int):
+    """Jitted Table IV sizing: the n_total solve AND the largest-remainder
+    stratum allocation run as ONE device program (historically a host
+    numpy reduction — PR 5 residual). ``lo``/``hi`` are traced clamp
+    bounds so changing ``max_total`` never recompiles."""
+    import jax
+    import jax.numpy as jnp
+
+    from . import tables as _tables
+
+    neyman = allocation == "neyman"
+
+    def prog(w, s, v_budget, lo, hi):
+        if neyman:
+            # v_phase2(n) = (sum W_h S_h)^2 / n under Neyman allocation
+            n_total = jnp.ceil((w * s).sum() ** 2 / v_budget)
+        else:
+            n_total = jnp.ceil((w * s * s).sum() / v_budget)
+        n_total = jnp.clip(n_total, lo, hi)
+        if neyman:
+            return _tables.neyman_allocation(
+                w, s, n_total, min_per_stratum=min_per_stratum)
+        return _tables.proportional_allocation(
+            w, n_total, min_per_stratum=min_per_stratum)
+
+    return jax.jit(prog)
+
+
 def phase2_sizes_for_margin(
     weights: Sequence[float],
     within_stds: Sequence[float],
@@ -119,18 +149,26 @@ def phase2_sizes_for_margin(
     allocation: str = "neyman",
     min_per_stratum: int = 2,
     max_total: int = 10**7,
+    precision=None,
 ) -> np.ndarray:
     """Choose phase-2 per-stratum sizes so the eq. (6) margin hits a target.
 
     This implements the paper's Table IV sizing policy: the phase-1 term
     ``between_var / phase1_n`` is fixed; we solve for the total phase-2 size
     whose stratified term brings the *combined* margin under
-    ``target_margin_abs``, then allocate across strata.
+    ``target_margin_abs``, then allocate across strata — the solve and the
+    allocation run as one jitted device program under the
+    ``PrecisionPolicy`` (default ``host_parity``: f64 trace off-TPU, so
+    sizes match the historic numpy reduction). The attainability check
+    stays host-side: an unattainable margin is a *caller* error and must
+    raise eagerly, not poison a traced program with NaN.
     """
+    from ..precision import PrecisionPolicy
     from .types import critical_value
 
-    w = np.asarray(weights, dtype=np.float64)
-    s = np.asarray(within_stds, dtype=np.float64)
+    pp = precision if precision is not None else PrecisionPolicy.host_parity()
+    w = np.asarray(weights, dtype=pp.trace_dtype)
+    s = np.asarray(within_stds, dtype=pp.trace_dtype)
     z = critical_value(confidence, None)
     v_target = (target_margin_abs / z) ** 2
     v_phase1 = between_var / phase1_n
@@ -139,16 +177,12 @@ def phase2_sizes_for_margin(
         raise ValueError(
             "target margin unattainable: phase-1 variance term alone "
             f"({v_phase1:.3e}) exceeds the variance budget ({v_target:.3e})")
+    if allocation not in ("neyman", "proportional"):
+        raise ValueError(f"unknown allocation {allocation!r}")
 
-    if allocation == "neyman":
-        # v_phase2(n) = (sum W_h S_h)^2 / n under Neyman allocation.
-        n_total = int(np.ceil(((w * s).sum() ** 2) / v_budget))
-        from .allocation import neyman_allocation
-        n_total = min(max(n_total, 2 * len(w)), max_total)
-        return neyman_allocation(w, s, n_total, min_per_stratum=min_per_stratum)
-    elif allocation == "proportional":
-        n_total = int(np.ceil((w * s * s).sum() / v_budget))
-        from .allocation import proportional_allocation
-        n_total = min(max(n_total, 2 * len(w)), max_total)
-        return proportional_allocation(w, n_total)
-    raise ValueError(f"unknown allocation {allocation!r}")
+    program = _sizing_program(allocation, int(min_per_stratum))
+    with pp.x64_context():
+        n_h = program(w, s, np.asarray(v_budget, pp.trace_dtype),
+                      np.asarray(2 * len(w), pp.trace_dtype),
+                      np.asarray(max_total, pp.trace_dtype))
+    return np.asarray(n_h)

@@ -169,8 +169,8 @@ class SweepStack:
 
 
 def _segment_sums_counts(labels: np.ndarray, valid: np.ndarray,
-                         num_strata: int, values: np.ndarray
-                         ) -> tuple[np.ndarray, np.ndarray]:
+                         num_strata: int, values: np.ndarray,
+                         precision=None) -> tuple[np.ndarray, np.ndarray]:
     """(A, L) per-stratum value sums AND counts over valid entries, from
     ONE batched ``segment_stats`` dispatch (the Pallas kernel on TPU, the
     jnp oracle elsewhere — ``repro.kernels.segment_stats``).
@@ -178,19 +178,24 @@ def _segment_sums_counts(labels: np.ndarray, valid: np.ndarray,
     This is the engine's stratum-summary hot path: every build/selection
     summarization (stratum weights, centroid targets, gather tables)
     routes through the same kernel contract the estimator tables use.
-    The kernel contract accumulates in float32 (identical on and off
-    TPU): counts are exact below 2^24 per stratum, and value sums carry
-    ~1e-7 relative rounding — selection keys built from them (dg
-    centroids, mean-policy targets, CI ordering keys) are f32-stable by
-    design, not bit-equal to a float64 bincount.
+    Dtypes follow the ``PrecisionPolicy`` (``repro.core.precision``;
+    default f32 trace / f64 host): the kernel computes in the trace
+    dtype — counts are exact below 2^24 per stratum, and f32 value sums
+    carry ~1e-7 relative rounding — so selection keys built from them
+    (dg centroids, mean-policy targets, CI ordering keys) are
+    trace-dtype-stable by design, not bit-equal to a float64 bincount.
+    Results come home in the policy's host dtype.
     """
+    from ..core.precision import resolve_precision
     from ..kernels.segment_stats.ops import segment_stats
 
+    pp = resolve_precision(precision)
     lab = np.where(valid, labels, -1).astype(np.int32)
-    sums, _, counts = segment_stats(np.asarray(values, np.float32), lab,
-                                    num_strata)
-    return (np.asarray(sums[..., 0], np.float64),
-            np.asarray(counts, np.float64))
+    with pp.x64_context():
+        sums, _, counts = segment_stats(np.asarray(values, pp.trace_dtype),
+                                        lab, num_strata, precision=pp)
+    return (np.asarray(sums[..., 0], pp.host_dtype),
+            np.asarray(counts, pp.host_dtype))
 
 
 def _offset_bincount(labels: np.ndarray, valid: np.ndarray,
@@ -229,9 +234,12 @@ def stratum_tables(labels: np.ndarray, valid: np.ndarray, num_strata: int,
 class ExperimentEngine:
     """Builds ``AppExperiment`` state batched over apps; runs batched sweeps.
 
-    ``mesh``: optional 1-D ``("app",)`` mesh — every batched build/sweep
-    dispatch is then ``shard_map``-ped over the app axis. ``None`` (the
-    default) runs the identical programs on one device.
+    ``mesh``: optional ``("app",)`` mesh — every batched build/sweep
+    dispatch is then ``shard_map``-ped over the app axis — or a 2-D
+    ``("app", "trial")`` mesh, which additionally splits Monte-Carlo
+    trial chunks across the second axis (``run_trials``; build/sweep
+    dispatches treat such a mesh as app-only). ``None`` (the default)
+    runs the identical programs on one device.
     """
 
     @classmethod
@@ -250,11 +258,15 @@ class ExperimentEngine:
     def __init__(self, *, configs: Sequence = CONFIGS,
                  num_strata: int = NUM_STRATA,
                  phase1_seed: int = PHASE1_SEED,
-                 mesh=None):
+                 mesh=None, precision=None):
         self.configs = tuple(configs)
         self.num_strata = num_strata
         self.phase1_seed = phase1_seed
         self.mesh = mesh
+        # engine-wide PrecisionPolicy override; None defers to each
+        # pipeline's default (trials: DEFAULT_PRECISION, sweep estimates:
+        # PrecisionPolicy.host_parity) — see repro.core.precision
+        self.precision = precision
         self.memo = MemoBank()
         self._apps: dict[tuple[str, int], AppExperiment] = {}
         self._stacks: dict[tuple[tuple[str, ...], int], SweepStack] = {}

@@ -1,25 +1,36 @@
-"""Engine-backed Monte-Carlo trials (paper Fig 8) as vmapped trial axes.
+"""Engine-backed Monte-Carlo trials (paper Fig 8) as a streaming reduction.
 
-``bench_ci_empirical`` used to run 1000-trial numpy loops per app and per
-stratum; ``run_trials`` folds both into array axes: ONE program per scheme
-evaluates every (app, trial, stratum) draw — uniforms of shape
-``(A, T, L)`` (or ``(A, T, n)`` for the SRS scheme) gathered against
-per-app stratum tables. With an ``("app",)`` mesh the app axis runs
-device-parallel; the uniforms are drawn *outside* the sharded region from
-one PRNG key, so sharded and single-device runs use identical draws and
-produce identical estimates.
+``run_trials`` used to vmap one monolithic ``(A, T, ...)`` program per
+scheme, so host and device memory scaled linearly with the trial count T
+— fine at the paper's 1000 trials, a wall at the 10^5–10^6 replications
+the conservative-CI claim needs. This module streams instead: a chunked
+``lax.scan`` over fixed-size trial blocks folds every chunk's per-trial
+outcomes into an *additive* accumulator (``TrialStats`` in
+``repro.core.sampling.tables`` — running coverage counts, error moments,
+log-histogram quantile sketches), so memory is bounded by one chunk at
+any trial count and per-trial arrays never materialize unless asked for.
 
-The same one-dispatch-per-scheme program also evaluates a per-trial
-confidence interval (the Fig 8 → CI-claim bridge): the SRS scheme uses
-the eq. (2) t-interval, the one-unit-per-stratum schemes the pairwise
-collapsed-strata variance (eq. 4) over the occupied strata in
-baseline-CPI order — evaluated lane-wise by the batched estimators in
-``repro.core.sampling.tables``. ``TrialResult`` reports the absolute CI
-half-width per (app, trial) and the empirical coverage of the census
-truth per app; t critical values come from per-app static dfs, computed
-host-side once per scheme. The per-stratum order keys route through the
-``segment_stats`` kernel contract (one batched dispatch, jnp oracle
-off-TPU).
+PRNG contract (the chunked == unchunked bitwise guarantee): uniforms are
+drawn in fixed ``TRIAL_BLOCK``-sized trial blocks, block ``b`` of app
+``a`` from ``fold_in(fold_in(trial_key, b), a)`` — a pure function of
+(seed, scheme, block, app). Any chunking of the scan, any ``("app",)``
+or ``("app", "trial")`` mesh sharding, and the ``trial_uniforms``
+reference helper therefore consume bitwise-identical draws.
+
+Mesh story: with a 2-D ``("app", "trial")`` mesh
+(``repro.launch.mesh.make_app_trial_mesh``) each chunk is ``shard_map``-
+ped over both axes — app lanes stay independent, and the trial axis
+splits each chunk's blocks across devices, with the accumulator merged
+by a ``psum`` over the trial axis (additivity makes the cross-device
+coverage/CI merge exact: sharded totals equal single-device totals).
+
+The per-trial math is unchanged from the vmapped design: the SRS scheme
+evaluates the eq. (2) t-interval, the one-unit-per-stratum schemes the
+pairwise collapsed-strata variance (eq. 4) over occupied strata in
+baseline-CPI order, lane-wise via ``repro.core.sampling.tables``.
+Dtypes route through ONE ``PrecisionPolicy`` (``repro.core.precision``):
+trace dtype for the chunk programs, accumulator dtype for the scan
+carry, host dtype for numpy-side statistics.
 
 Cost accounting matches the figure's semantics exactly: schemes drawing
 from census CPI (``random``, ``bbv``) are analysis-only and free; schemes
@@ -31,20 +42,22 @@ through the engine's charged ``MemoBank`` (paid once, like the historic
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.precision import PrecisionPolicy, resolve_precision
 from ..core.sampling import plan as sampling_plan
 from ..core.sampling import tables as sampling_tables
 from ..core.sampling.types import critical_values
 from ..simcpu import APP_NAMES, stack_ragged
 from .engine import ExperimentEngine, stratum_tables
 
-__all__ = ["SRS_DRAWS", "TRIAL_SCHEMES", "TrialSpec", "TrialResult",
-           "run_trials", "trial_key", "trial_uniforms"]
+__all__ = ["SRS_DRAWS", "TRIAL_SCHEMES", "TRIAL_BLOCK", "TrialSpec",
+           "TrialResult", "run_trials", "trial_key", "trial_uniforms"]
 
 # the plan-less trial scheme: n-unit uniform draws from the census pool
 SRS_DRAWS = "random"
@@ -52,6 +65,17 @@ SRS_DRAWS = "random"
 # draws are identical no matter which subset a TrialSpec requests;
 # registry plug-ins hash their name past this range (trial_key)
 TRIAL_SCHEMES = (SRS_DRAWS, "bbv", "rfv", "dg")
+
+# PRNG block granularity: uniforms are drawn per TRIAL_BLOCK trials from a
+# per-block fold-in, so draws are a function of the block index alone —
+# the unit the chunked scan, the trial-mesh split and the dense reference
+# all agree on. Chunk sizes are multiples of this.
+TRIAL_BLOCK = 256
+# default trials per scan step: bounds live memory at ~chunk × pool-width
+_DEFAULT_CHUNK = 4096
+# keep dense (A, T) per-trial arrays by default up to this many trials
+# (the Fig 8 regime); past it only the streamed statistics come home
+_KEEP_TRIALS_MAX = 8192
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +87,14 @@ class TrialSpec:
     (``repro.core.sampling.plan``) — names are validated against the
     registry at construction, so an unknown scheme fails here rather
     than mid-study.
+
+    Streaming knobs: ``chunk_size`` fixes the trials evaluated per scan
+    step (a positive multiple of ``TRIAL_BLOCK``; default ~4096, rounded
+    to the trial-mesh split) — it changes memory and scheduling, never
+    results. ``keep_trials`` forces (True) or suppresses (False) the
+    dense per-trial ``(A, T)`` arrays; default keeps them only up to
+    8192 trials. ``precision`` overrides the engine's
+    ``PrecisionPolicy`` for the trial programs.
     """
 
     trials: int = 1000
@@ -71,6 +103,9 @@ class TrialSpec:
     config_index: int = 6              # study config (paper: Config 6)
     seed: int = 7
     confidence: float = 0.95           # per-trial CI level
+    chunk_size: Optional[int] = None   # trials per scan step
+    keep_trials: Optional[bool] = None  # materialize dense (A, T) arrays
+    precision: Optional[PrecisionPolicy] = None
 
     def __post_init__(self):
         unknown = (set(self.schemes) - {SRS_DRAWS}
@@ -79,38 +114,58 @@ class TrialSpec:
             raise ValueError(
                 f"unknown trial scheme(s) {sorted(unknown)}; known: "
                 f"{(SRS_DRAWS,) + sampling_plan.registered_stratifiers()}")
+        if self.chunk_size is not None and (
+                self.chunk_size <= 0 or self.chunk_size % TRIAL_BLOCK):
+            raise ValueError(
+                f"chunk_size must be a positive multiple of TRIAL_BLOCK="
+                f"{TRIAL_BLOCK}, got {self.chunk_size}")
 
 
 @dataclasses.dataclass(frozen=True)
 class TrialResult:
     """Per-scheme Monte-Carlo outcomes for one ``run_trials`` study.
 
+    ``stats[scheme]`` is the streamed ``TrialStats`` accumulator — the
+    always-available product of the chunked scan: trial/coverage counts,
+    error and half-width moments, and log-histogram quantile sketches,
+    all per app. ``coverage``, ``p95`` and ``half_width_pct`` read from
+    it, so they work at any trial count without per-trial arrays.
+
     ``estimates[scheme]`` / ``errors[scheme]`` / ``half_widths[scheme]``
-    are ``(A, T)`` arrays over the (app, trial) axes: estimated mean CPI,
-    percent |error| vs the census truth at ``spec.config_index``, and the
-    absolute CI half-width at ``spec.confidence``. ``coverage[scheme]``
-    is the ``(A,)`` empirical coverage — the fraction of trials whose CI
-    contains the truth (the paper's conservative-CI claim evaluated
-    empirically). SRS trials use the eq. (2) t-interval; stratified
-    one-unit-per-stratum trials the eq. (4) collapsed-pairs interval.
+    are the dense ``(A, T)`` per-trial arrays (estimated mean CPI,
+    percent |error| vs the census truth, absolute CI half-width at
+    ``spec.confidence``) — populated only when the spec keeps them
+    (``TrialSpec.keep_trials``; default up to 8192 trials). SRS trials
+    use the eq. (2) t-interval; stratified one-unit-per-stratum trials
+    the eq. (4) collapsed-pairs interval.
     """
 
     apps: tuple[str, ...]
     spec: TrialSpec
-    estimates: dict[str, np.ndarray]    # scheme -> (A, T) estimated mean CPI
-    errors: dict[str, np.ndarray]       # scheme -> (A, T) percent |error|
+    stats: dict[str, sampling_tables.TrialStats]
+    estimates: dict[str, np.ndarray] = dataclasses.field(
+        default_factory=dict)       # scheme -> (A, T), only when kept
+    errors: dict[str, np.ndarray] = dataclasses.field(
+        default_factory=dict)       # scheme -> (A, T), only when kept
     half_widths: dict[str, np.ndarray] = dataclasses.field(
-        default_factory=dict)           # scheme -> (A, T) abs CI half-width
-    coverage: dict[str, np.ndarray] = dataclasses.field(
-        default_factory=dict)           # scheme -> (A,) empirical coverage
+        default_factory=dict)       # scheme -> (A, T), only when kept
+
+    @property
+    def coverage(self) -> dict[str, np.ndarray]:
+        """scheme -> (A,) empirical coverage — the fraction of trials
+        whose CI contains the truth, from the streamed counts (exact)."""
+        return {s: np.asarray(st.coverage) for s, st in self.stats.items()}
 
     def p95(self, scheme: str) -> np.ndarray:
-        """(A,) 95th-percentile |error| per app (the Fig 8 statistic)."""
-        return np.percentile(self.errors[scheme], 95, axis=1)
+        """(A,) 95th-percentile |error| per app (the Fig 8 statistic),
+        read from the streamed quantile sketch — no per-trial arrays."""
+        return np.asarray(self.stats[scheme].err_quantile(0.95))
 
     def half_width_pct(self, scheme: str, truth: np.ndarray) -> np.ndarray:
-        """(A, T) CI half-widths as percent of the per-app truth."""
-        return 100.0 * self.half_widths[scheme] / np.asarray(truth)[:, None]
+        """(A,) mean CI half-width as percent of the per-app truth, from
+        the streamed moments (the nanmean of per-trial widths)."""
+        return 100.0 * np.asarray(self.stats[scheme].half_mean) \
+            / np.asarray(truth)
 
 
 def trial_key(spec: TrialSpec, scheme: str) -> jax.Array:
@@ -127,17 +182,48 @@ def trial_key(spec: TrialSpec, scheme: str) -> jax.Array:
         sampling_plan.trial_scheme_index(scheme, TRIAL_SCHEMES))
 
 
+def _block_uniforms(key, block_index, app_ids, draws: int, dtype):
+    """(A, TRIAL_BLOCK, D) canonical draws for one trial block.
+
+    Block ``b`` of app ``a`` is ``uniform(fold_in(fold_in(key, b), a))``
+    — a pure function of (key, block, app), independent of the total
+    trial count, the chunking, the mesh, or which apps run together.
+    This is the contract that makes chunked == unchunked and sharded ==
+    single-device runs consume bitwise-identical uniforms.
+    """
+    bk = jax.random.fold_in(key, block_index)
+    return jax.vmap(lambda a: jax.random.uniform(
+        jax.random.fold_in(bk, a), (TRIAL_BLOCK, draws), dtype))(app_ids)
+
+
+def _run_uniforms(key, start_block, num_blocks: int, app_ids,
+                  draws: int, dtype):
+    """(A, num_blocks * TRIAL_BLOCK, D) draws for consecutive blocks."""
+    blocks = jax.vmap(
+        lambda b: _block_uniforms(key, b, app_ids, draws, dtype))(
+            start_block + jnp.arange(num_blocks))
+    a = app_ids.shape[0]
+    return blocks.transpose(1, 0, 2, 3).reshape(
+        a, num_blocks * TRIAL_BLOCK, draws)
+
+
 def trial_uniforms(spec: TrialSpec, scheme: str, num_apps: int,
                    draws_per_trial: int) -> np.ndarray:
-    """The (A, T, D) uniform draws backing one scheme's trials."""
-    return np.asarray(jax.random.uniform(
-        trial_key(spec, scheme),
-        (num_apps, spec.trials, draws_per_trial), jnp.float32))
+    """The (A, T, D) uniform draws backing one scheme's trials — the
+    dense reference view of the block-based PRNG contract
+    (``_block_uniforms``); trial ``t`` lives at offset ``t % TRIAL_BLOCK``
+    of block ``t // TRIAL_BLOCK``."""
+    pp = resolve_precision(spec.precision)
+    n_blocks = -(-spec.trials // TRIAL_BLOCK)
+    u = _run_uniforms(trial_key(spec, scheme), 0, n_blocks,
+                      jnp.arange(num_apps), draws_per_trial,
+                      jnp.dtype(pp.trace))
+    return np.asarray(u[:, :spec.trials])
 
 
-def _srs_trials(u, pool, n_valid, truth, crit):
-    """(A, T, n) uniforms x (A, N) value pool -> per-trial estimate,
-    percent error, eq. (2) t-interval half-width, and coverage."""
+def _srs_chunk(u, truth, crit, pool, n_valid):
+    """(A, Tc, n) uniforms x (A, N) value pool -> per-trial estimate,
+    percent error, eq. (2) t-interval half-width and CI-covers-truth."""
     a, t, n = u.shape
     idx = jnp.minimum((u * n_valid[:, None, None]).astype(jnp.int32),
                       (n_valid - 1)[:, None, None].astype(jnp.int32))
@@ -149,12 +235,12 @@ def _srs_trials(u, pool, n_valid, truth, crit):
     ss = ((vals - est[:, :, None]) ** 2).sum(axis=2)
     v_mean = jnp.where(n > 1, ss / max(n - 1, 1), jnp.nan) / n
     half = crit[:, None] * jnp.sqrt(v_mean)
-    cover = (jnp.abs(est - truth[:, None]) <= half).mean(axis=1)
-    return est, err, half, cover
+    covered = jnp.abs(est - truth[:, None]) <= half
+    return est, err, half, covered
 
 
-def _stratified_trials(u, sorted_vals, offsets, counts, weights, truth,
-                       key_order, w_sorted, n_occ, crit):
+def _stratified_chunk(u, truth, crit, sorted_vals, offsets, counts,
+                      weights, key_order, w_sorted, n_occ):
     """One unit per non-empty stratum per trial, weighted sum (the Fig 8
     estimator: empty strata contribute nothing, no renormalization) —
     plus the eq. (4) collapsed-pairs CI over occupied strata, evaluated
@@ -178,23 +264,96 @@ def _stratified_trials(u, sorted_vals, offsets, counts, weights, truth,
     var, _ = sampling_tables.collapsed_pairs_variance(
         y_sorted, w_sorted[:, None, :], n_occ[:, None], num_strata=l)
     half = crit[:, None] * jnp.sqrt(var)
-    cover = (jnp.abs(est - truth[:, None]) <= half).mean(axis=1)
-    return est, err, half, cover
+    covered = jnp.abs(est - truth[:, None]) <= half
+    return est, err, half, covered
 
 
-_srs_trials_jit = jax.jit(_srs_trials)
-_stratified_trials_jit = jax.jit(_stratified_trials)
+@functools.lru_cache(maxsize=None)
+def _streaming_program(chunk_fn, mesh, *, kb: int, n_chunks: int,
+                       trials: int, draws: int, trace: str, accum: str,
+                       keep: bool):
+    """Build (and cache) the chunked-scan trial program for one geometry.
 
+    The returned callable takes ``(key, app_ids, truth, crit, *tables)``
+    — app-leading arrays except the replicated key — and returns
+    ``(TrialStats, ys)`` where ``ys`` is the per-chunk dense stack
+    ``(n_chunks, A, chunk)`` triple when ``keep`` else ``None``.
 
-def _dispatch(fn, fn_jit, mesh, *args):
+    Geometry: each scan step evaluates one chunk of ``kb`` PRNG blocks
+    (``kb * TRIAL_BLOCK`` trials). Under an ``("app", "trial")`` mesh the
+    chunk's blocks split evenly across the trial axis (``kb`` is a
+    multiple of the axis size), each device folds its own blocks into a
+    local accumulator, and a final ``psum`` over the trial axis merges
+    the totals — additive leaves make the merge exact.
+    """
+    chunk = kb * TRIAL_BLOCK
+    dt = jnp.dtype(trace)
     if mesh is None:
-        return fn_jit(*args)
-    from ..distributed.appaxis import app_sharded_cached
-    return app_sharded_cached(fn, mesh)(*args)
+        trial_axis, ntd = None, 1
+    else:
+        from ..distributed.appaxis import app_trial_axes
+        _, trial_axis = app_trial_axes(mesh)
+        ntd = 1 if trial_axis is None else mesh.shape[trial_axis]
+    kbd = kb // ntd                 # blocks per trial-device per chunk
+    tc = kbd * TRIAL_BLOCK          # trials per trial-device per chunk
+
+    def prog(key, app_ids, truth, crit, *tables):
+        ti = (jax.lax.axis_index(trial_axis)
+              if trial_axis is not None else 0)
+        stats0 = sampling_tables.trial_stats_init(
+            (app_ids.shape[0],), accum_dtype=np.dtype(accum), xp=jnp)
+
+        def step(carry, c):
+            b0 = c * kb + ti * kbd
+            u = _run_uniforms(key, b0, kbd, app_ids, draws, dt)
+            est, err, half, covered = chunk_fn(u, truth, crit, *tables)
+            valid = (b0 * TRIAL_BLOCK + jnp.arange(tc)) < trials
+            carry = sampling_tables.trial_stats_update(
+                carry, err, half, covered, valid[None, :])
+            return carry, ((est, err, half) if keep else None)
+
+        stats, ys = jax.lax.scan(step, stats0, jnp.arange(n_chunks))
+        if trial_axis is not None:
+            stats = jax.tree.map(lambda x: jax.lax.psum(x, trial_axis),
+                                 stats)
+        return stats, ys
+
+    if mesh is None:
+        return jax.jit(prog)
+    from jax.sharding import PartitionSpec as P
+
+    from ..distributed.appaxis import app_trial_axes, make_app_trial_sharded
+    app_axis, trial_axis = app_trial_axes(mesh)
+    ys_spec = (P(None, app_axis, trial_axis),) * 3 if keep else None
+    return make_app_trial_sharded(
+        prog, mesh, replicated=(0,), out_specs=(P(app_axis), ys_spec),
+        trim=_trim_streaming_out)
+
+
+def _trim_streaming_out(out, a_size: int):
+    """Drop app-axis padding: stats lead with the app axis, dense chunk
+    stacks carry it second (``(n_chunks, A, chunk)``)."""
+    stats, ys = out
+    stats = jax.tree.map(lambda x: x[:a_size], stats)
+    if ys is not None:
+        ys = jax.tree.map(lambda y: y[:, :a_size], ys)
+    return stats, ys
+
+
+def _chunk_blocks(spec: TrialSpec, ntd: int) -> tuple[int, int]:
+    """(kb, n_chunks): blocks per chunk — a multiple of the trial-axis
+    size so each device owns whole blocks — and the scan length."""
+    blocks_needed = -(-spec.trials // TRIAL_BLOCK)
+    kb = -(-(spec.chunk_size or _DEFAULT_CHUNK) // TRIAL_BLOCK)
+    kb = min(kb, blocks_needed)
+    kb = -(-kb // ntd) * ntd
+    n_chunks = -(-blocks_needed // kb)
+    return kb, n_chunks
 
 
 def _stratum_key_counts(baseline: np.ndarray, labels: np.ndarray,
-                        valid: np.ndarray, num_strata: int
+                        valid: np.ndarray, num_strata: int,
+                        precision: Optional[PrecisionPolicy] = None,
                         ) -> tuple[np.ndarray, np.ndarray]:
     """(A, L) per-stratum mean-baseline-CPI ordering key (+inf for empty
     strata) AND the stratum counts, from the engine's ONE-dispatch
@@ -202,7 +361,8 @@ def _stratum_key_counts(baseline: np.ndarray, labels: np.ndarray,
     counts feed ``stratum_tables`` so no second dispatch is needed."""
     from .engine import _segment_sums_counts
 
-    sums, cnts = _segment_sums_counts(labels, valid, num_strata, baseline)
+    sums, cnts = _segment_sums_counts(labels, valid, num_strata, baseline,
+                                      precision=precision)
     key = np.where(cnts > 0, sums / np.maximum(cnts, 1.0), np.inf)
     return key, cnts
 
@@ -210,12 +370,15 @@ def _stratum_key_counts(baseline: np.ndarray, labels: np.ndarray,
 def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
                apps: Optional[Sequence[str]] = None,
                mesh=None, stratifiers: Optional[dict] = None) -> TrialResult:
-    """Monte-Carlo selection trials for every app in one program per scheme.
+    """Monte-Carlo selection trials, one streaming program per scheme.
 
-    No host-side per-app or per-trial loops: each scheme is one vmapped
-    (optionally app-sharded) dispatch over the (app, trial, stratum/unit)
-    axes — including the per-trial CI half-width and its empirical
-    coverage of the census truth (see ``TrialResult``).
+    No host-side per-app or per-trial loops: each scheme is one chunked
+    ``lax.scan`` dispatch (optionally ``shard_map``-ped over an
+    ``("app",)`` or ``("app", "trial")`` mesh) that folds every chunk of
+    trials into the additive ``TrialStats`` accumulator — including the
+    per-trial CI half-width and its empirical coverage of the census
+    truth (see ``TrialResult``). Memory is bounded by one chunk at any
+    trial count; results are invariant to the chunking and the mesh.
 
     ``stratifiers`` optionally maps scheme names to configured
     ``Stratifier`` *instances* (``run_sweep`` passes its plan's), so a
@@ -229,7 +392,20 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
     ci = spec.config_index
     cfg = engine.configs[ci]
     l_n = engine.num_strata
+    pp = resolve_precision(spec.precision, engine.precision)
+    tdt = pp.trace_dtype
     truth = np.stack([e.truth[ci] for e in exps])
+
+    if mesh is None:
+        ntd = 1
+    else:
+        from ..distributed.appaxis import app_trial_axes
+        _, trial_axis = app_trial_axes(mesh)
+        ntd = 1 if trial_axis is None else mesh.shape[trial_axis]
+    kb, n_chunks = _chunk_blocks(spec, ntd)
+    keep = (spec.keep_trials if spec.keep_trials is not None
+            else spec.trials <= _KEEP_TRIALS_MAX)
+    app_ids = np.arange(len(apps), dtype=np.int32)
 
     # registry-resolved stratifications: each scheme name becomes a
     # Stratifier whose StratumBank declares its labels, weights and
@@ -243,28 +419,26 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
                if strat.pool_kind == "phase1"}
 
     # value pools: census CPI (free) and phase-1 CPI (charged once)
-    census, _ = stack_ragged([e.census(ci) for e in exps], dtype=np.float32)
+    census, _ = stack_ragged([e.census(ci) for e in exps], dtype=tdt)
     p1_pool = None
     if charged:
         cpi, _ = engine.memo.fill(stack.rows, stack.idx1, stack.idx1_valid,
                                   (cfg,),
                                   feats=stack.gather_feats(stack.idx1),
                                   mesh=mesh)
-        p1_pool = cpi[:, 0, :].astype(np.float32)          # (A, n1_max)
+        p1_pool = cpi[:, 0, :].astype(tdt)                 # (A, n1_max)
 
+    stats: dict[str, sampling_tables.TrialStats] = {}
     estimates: dict[str, np.ndarray] = {}
     errors: dict[str, np.ndarray] = {}
     halves: dict[str, np.ndarray] = {}
-    coverage: dict[str, np.ndarray] = {}
     for scheme in spec.schemes:
         if scheme == SRS_DRAWS:
             n = spec.units_per_trial
             dfs = np.full(len(apps), float(n - 1) if n < 30 else np.inf)
-            crit = critical_values(spec.confidence, dfs).astype(np.float32)
-            u = trial_uniforms(spec, scheme, len(apps), n)
-            est, err, half, cov = _dispatch(
-                _srs_trials, _srs_trials_jit, mesh,
-                u, census, stack.n_regions, truth, crit)
+            crit = critical_values(spec.confidence, dfs).astype(tdt)
+            chunk_fn, draws = _srs_chunk, n
+            tables = (census, stack.n_regions)
         else:
             bank = banks[scheme]
             labels, lv = bank.labels, bank.valid
@@ -275,10 +449,11 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
                 pool = census
             else:                                 # census values at pool idx
                 pool = np.take_along_axis(census, bank.pool, axis=1)
-            baseline = bank.baseline.astype(np.float32)
+            baseline = bank.baseline.astype(tdt)
             # ONE stratum-summary dispatch serves the collapsed-pairs
             # ordering key AND the gather-table counts
-            key, countsf = _stratum_key_counts(baseline, labels, lv, l_n)
+            key, countsf = _stratum_key_counts(baseline, labels, lv, l_n,
+                                               precision=pp)
             order, offsets, counts = stratum_tables(labels, lv, l_n,
                                                     counts=countsf)
             sorted_vals = np.take_along_axis(pool, order, axis=1)
@@ -288,17 +463,29 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
             w_sorted = np.take_along_axis(weights, key_order, axis=1)
             n_occ = (counts > 0).sum(axis=1)
             dfs = np.maximum(n_occ - n_occ // 2, 1).astype(np.float64)
-            crit = critical_values(spec.confidence, dfs).astype(np.float32)
-            u = trial_uniforms(spec, scheme, len(apps), l_n)
-            est, err, half, cov = _dispatch(
-                _stratified_trials, _stratified_trials_jit, mesh,
-                u, sorted_vals, offsets.astype(np.int32),
-                counts.astype(np.int32), weights.astype(np.float32), truth,
-                key_order.astype(np.int32), w_sorted.astype(np.float32),
-                n_occ.astype(np.int32), crit)
-        estimates[scheme] = np.asarray(est)
-        errors[scheme] = np.asarray(err)
-        halves[scheme] = np.asarray(half)
-        coverage[scheme] = np.asarray(cov)
-    return TrialResult(apps=apps, spec=spec, estimates=estimates,
-                       errors=errors, half_widths=halves, coverage=coverage)
+            crit = critical_values(spec.confidence, dfs).astype(tdt)
+            chunk_fn, draws = _stratified_chunk, l_n
+            tables = (sorted_vals, offsets.astype(np.int32),
+                      counts.astype(np.int32), weights.astype(tdt),
+                      key_order.astype(np.int32), w_sorted.astype(tdt),
+                      n_occ.astype(np.int32))
+        program = _streaming_program(
+            chunk_fn, mesh, kb=kb, n_chunks=n_chunks, trials=spec.trials,
+            draws=draws, trace=pp.trace, accum=pp.accum, keep=keep)
+        with pp.x64_context():
+            st, ys = program(trial_key(spec, scheme), app_ids,
+                             truth.astype(tdt), crit, *tables)
+            if mesh is None:
+                st, ys = _trim_streaming_out((st, ys), len(apps))
+        stats[scheme] = jax.tree.map(np.asarray, st)
+        if keep:
+            # (n_chunks, A, chunk) stacks -> (A, T) trial-major views
+            est, err, half = (
+                np.asarray(y).transpose(1, 0, 2).reshape(len(apps), -1)
+                [:, :spec.trials] for y in ys)
+            estimates[scheme] = est
+            errors[scheme] = err
+            halves[scheme] = half
+    return TrialResult(apps=apps, spec=spec, stats=stats,
+                       estimates=estimates, errors=errors,
+                       half_widths=halves)

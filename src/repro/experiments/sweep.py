@@ -239,7 +239,7 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
                 f"{bad}; renormalizing biases those estimates",
                 UserWarning, stacklevel=2)
         ests, errs = spec.plan.estimator.sweep_estimates(
-            cpi, valid, weights, truth)
+            cpi, valid, weights, truth, precision=engine.precision)
         margins = None
         n_units = valid.sum(axis=1)
 
@@ -256,7 +256,9 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
         p95 = mc.p95(mc_scheme)
         mc_truth = np.stack(
             [e.truth[spec.trials.config_index] for e in exps])
-        ci_half = np.nanmean(mc.half_width_pct(mc_scheme, mc_truth), axis=1)
+        # streamed mean half-width percent (the nanmean over trials now
+        # accumulates inside the chunked scan — TrialStats.half_mean)
+        ci_half = mc.half_width_pct(mc_scheme, mc_truth)
         cov = mc.coverage[mc_scheme]
 
     rows: list[SweepRow] = []

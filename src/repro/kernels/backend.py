@@ -25,6 +25,7 @@ import warnings
 from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
 
 
 class BackendFallbackWarning(UserWarning):
@@ -67,6 +68,20 @@ def warn_fallback_once(kernel: str, requested: str, active: str,
 def reset_backend_warnings() -> None:
     """Re-arm the one-time fallback warnings (test helper)."""
     _FALLBACK_WARNED.clear()
+
+
+def kernel_compute_dtype(precision=None) -> jnp.dtype:
+    """The dtype a kernel contract computes in under a ``PrecisionPolicy``.
+
+    The jnp oracle honors the policy's *trace* dtype exactly; the Pallas
+    kernel bodies accumulate in f32 by construction, so wider traces only
+    widen the oracle path (kernel wrappers cast back to f32 before a
+    Pallas launch). ``precision=None`` resolves to the repo-wide default
+    policy (f32 trace) — the historic hardcoded-f32 behavior.
+    """
+    from repro.core.precision import resolve_precision
+
+    return jnp.dtype(resolve_precision(precision).trace)
 
 
 def resolve_backend(requested: str, *, kernel: str,

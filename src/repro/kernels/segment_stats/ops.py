@@ -18,7 +18,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..backend import ResolvedBackend, resolve_backend
+from ..backend import (ResolvedBackend, kernel_compute_dtype,
+                       resolve_backend)
 from .ref import segment_stats_ref
 from .segment_stats import BLOCK_N, segment_stats_padded
 
@@ -61,7 +62,7 @@ def resolve_segment_backend(requested: str) -> ResolvedBackend:
 
 
 def segment_stats(x: jax.Array, labels: jax.Array, num_segments: int,
-                  *, backend: str = "auto"
+                  *, backend: str = "auto", precision=None
                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-segment ``(sums, sumsq, counts)`` over any leading batch axes.
 
@@ -76,16 +77,21 @@ def segment_stats(x: jax.Array, labels: jax.Array, num_segments: int,
       backend: ``"auto"`` (kernel on TPU, jnp oracle elsewhere —
         warning once), ``"pallas"`` (force the kernel; interpret mode
         off-TPU) or ``"jnp"`` (force the oracle).
+      precision: optional ``PrecisionPolicy``; the oracle computes in its
+        trace dtype (``kernel_compute_dtype``). The Pallas kernel body is
+        f32 by construction, so a wider trace is honored by the oracle
+        path only.
 
     Returns:
-      ``(sums (..., k, d), sumsq (..., k, d), counts (..., k))`` float32.
+      ``(sums (..., k, d), sumsq (..., k, d), counts (..., k))`` in the
+      compute dtype (float32 under the default policy).
 
     The Pallas path pads n to ``BLOCK_N`` with label ``-1`` rows
     (matching no segment, contributing nothing) and flattens every
     leading axis into the kernel's ``(batch, n_tiles)`` grid — one
     dispatch regardless of rank.
     """
-    x = jnp.asarray(x, jnp.float32)
+    x = jnp.asarray(x, kernel_compute_dtype(precision))
     labels = jnp.asarray(labels, jnp.int32)
     if x.shape == labels.shape:
         x = x[..., None]
@@ -101,7 +107,7 @@ def segment_stats(x: jax.Array, labels: jax.Array, num_segments: int,
     # values are NaN/inf: the one-hot matmul would otherwise turn
     # 0 * NaN into NaN and poison every segment of the lane
     dead = (labels < 0) | (labels >= num_segments)
-    x = jnp.where(dead[..., None], 0.0, x)
+    x = jnp.where(dead[..., None], 0.0, x).astype(jnp.float32)
 
     batch_shape = labels.shape[:-1]
     n = labels.shape[-1]

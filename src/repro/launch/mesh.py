@@ -51,6 +51,26 @@ def make_app_mesh(max_devices: Optional[int] = None) -> Mesh:
     return Mesh(np.asarray(devs[:n]), ("app",))
 
 
+def make_app_trial_mesh(app_devices: int = 1,
+                        max_devices: Optional[int] = None) -> Mesh:
+    """2-D ``("app", "trial")`` mesh for the streaming Monte-Carlo engine.
+
+    ``app_devices`` lanes shard the application axis (pure data
+    parallelism, as in ``make_app_mesh``); the remaining devices form the
+    trial axis, across which each scan chunk's PRNG blocks split and the
+    additive ``TrialStats`` accumulator is ``psum``-merged
+    (``repro.distributed.appaxis.make_app_trial_sharded``). Devices that
+    do not fill the rectangle are left idle.
+    """
+    devs = jax.devices()
+    n = len(devs) if max_devices is None else max(1, min(max_devices,
+                                                         len(devs)))
+    app = max(1, min(app_devices, n))
+    trial = n // app
+    grid = np.asarray(devs[:app * trial]).reshape(app, trial)
+    return Mesh(grid, ("app", "trial"))
+
+
 def make_host_mesh(model_parallel: int = 1) -> Mesh:
     """Small mesh over the actually-available devices (tests/examples)."""
     n = len(jax.devices())
