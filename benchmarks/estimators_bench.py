@@ -17,6 +17,7 @@ lanes and reports:
 
 from __future__ import annotations
 
+import dataclasses
 import time
 import warnings
 
@@ -150,8 +151,146 @@ def _bench_sweep_estimates() -> dict:
           f"numpy reduction ({SWEEP_A}x{SWEEP_C}x{L_STRATA})")
     print(f"sweep_est_device_us,{device_s * 1e6:.1f},"
           f"jitted StratumTables program (x64={marker.get('x64')})")
-    print(f"sweep_est_speedup,{speedup:.2f},host/device")
+    # "staged": the estimate-stage-only dispatch of the staged pipeline —
+    # expected <1x at this tiny shape (launch cost dominates); the fused
+    # megaprogram's crossover is bench_fused_sweep's claim, not this one's
+    print(f"staged_sweep_speedup,{speedup:.2f},host/device (legacy "
+          "staged-path row; see fused_sweep for the gated crossover)")
     print(f"sweep_est_max_rel_err,{err:.2e},device vs host f64")
-    return {"sweep_max_rel_err": err, "sweep_speedup": speedup,
+    return {"sweep_max_rel_err": err, "staged_sweep_speedup": speedup,
             "sweep_host_s": host_s, "sweep_device_s": device_s,
             "sweep_x64": bool(marker.get("x64", False))}
+
+
+# --------------------------------------------------- fused sweep megaprogram
+FUSED_LADDER = [(2, 2), (4, 4), (10, 7)]      # (apps, configs) rungs
+FUSED_LADDER_QUICK = [(2, 2), (2, 7)]         # CI smoke (reduced scale)
+FUSED_REPS = 10
+FUSED_REPS_QUICK = 4
+
+
+def _memo_snapshot(memo):
+    """Copy-out of every mutable MemoBank field (arrays may GROW between
+    snapshot and restore as new config columns appear; restore handles
+    the leading-slice writeback)."""
+    return (memo.mask.copy(), memo.cpi.copy(), memo.charges.copy(),
+            list(memo.hit_count), list(memo.miss_count),
+            [(l.regions_simulated, l.instructions_simulated)
+             if l is not None else None for l in memo.ledgers])
+
+
+def _memo_restore(memo, snap):
+    """Restore a ``_memo_snapshot`` (column growth since is zeroed)."""
+    mask, cpi, charges, hits, misses, leds = snap
+    memo.mask[...] = False
+    memo.cpi[...] = 0.0
+    memo.charges[...] = 0
+    s3 = tuple(slice(0, d) for d in mask.shape)
+    memo.mask[s3], memo.cpi[s3] = mask, cpi
+    memo.charges[tuple(slice(0, d) for d in charges.shape)] = charges
+    memo.hit_count[:] = hits
+    memo.miss_count[:] = misses
+    for led, st in zip(memo.ledgers, leds):
+        if led is not None and st is not None:
+            led.regions_simulated, led.instructions_simulated = st
+    memo.touch()          # direct table writes: drop device-block mirrors
+
+
+def _ledger_totals(memo):
+    return [(l.regions_simulated, l.instructions_simulated)
+            if l is not None else None for l in memo.ledgers]
+
+
+def bench_fused_sweep(quick: bool = False) -> dict:
+    """Fused megaprogram vs staged pipeline over an (apps x configs)
+    ladder: measures the host/device crossover — the smallest sweep at
+    which ONE donated-buffer device program beats the staged
+    selection -> fill -> estimate chain — and gates parity (<=1e-6) and
+    bitwise ledger-charge equality at every rung."""
+    import jax
+
+    from repro.core.sampling import SamplingPlan
+    from repro.experiments import SweepSpec, run_sweep
+
+    from .simcpu_common import all_apps, get_engine
+
+    engine = get_engine()
+    ladder = FUSED_LADDER_QUICK if quick else FUSED_LADDER
+    reps = FUSED_REPS_QUICK if quick else FUSED_REPS
+    apps_all = all_apps()
+    plan = SamplingPlan.from_strings("rfv", "centroid")
+    rows = []
+    for a_n, c_n in ladder:
+        apps = tuple(apps_all[:a_n])
+        engine.build(apps)
+        spec = SweepSpec(apps=apps, plan=plan,
+                         config_indices=tuple(range(c_n)))
+        base = _memo_snapshot(engine.memo)
+
+        t_s = run_sweep(engine, dataclasses.replace(spec, fused=False))
+        led_staged = _ledger_totals(engine.memo)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            run_sweep(engine, dataclasses.replace(spec, fused=False))
+        staged_s = (time.perf_counter() - t0) / reps
+        _memo_restore(engine.memo, base)
+
+        t_f = run_sweep(engine, spec)                 # cold: compile + fill
+        led_fused = _ledger_totals(engine.memo)
+        marker = sampling_plan.last_sweep_dispatch() or {}
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            run_sweep(engine, spec)
+        fused_s = (time.perf_counter() - t0) / reps
+        _memo_restore(engine.memo, base)
+
+        err = _rel_err([r.estimate for r in t_f], [r.estimate for r in t_s])
+        speedup = staged_s / max(fused_s, 1e-12)
+        n_units = int(sum(r.n_units for r in t_f)) // c_n
+        rows.append({"apps": a_n, "configs": c_n, "regions": n_units,
+                     "staged_ms": staged_s * 1e3, "fused_ms": fused_s * 1e3,
+                     "speedup": speedup, "max_rel_err": err,
+                     "ledger_eq": led_staged == led_fused,
+                     "donated": bool(marker.get("donated", False))})
+        print(f"fused_sweep_{a_n}x{c_n},{speedup:.2f},staged/fused "
+              f"(staged {staged_s * 1e3:.1f}ms fused {fused_s * 1e3:.1f}ms "
+              f"rel_err {err:.1e} ledger_eq={led_staged == led_fused})")
+
+    crossover = next((r for r in rows if r["speedup"] >= 1.0), None)
+    print("fused_sweep_crossover,"
+          + (f"{crossover['apps']}x{crossover['configs']}" if crossover
+             else "none")
+          + f",smallest rung where fused >= 1x staged "
+          f"({len(jax.devices())} device(s))")
+    return {"rows": rows, "quick": bool(quick),
+            "crossover": ((crossover["apps"], crossover["configs"])
+                          if crossover else None),
+            "max_rung": max((r["apps"], r["configs"]) for r in rows),
+            "max_rel_err": max(r["max_rel_err"] for r in rows),
+            "ledger_eq": all(r["ledger_eq"] for r in rows),
+            "devices": len(jax.devices())}
+
+
+def profile_fused_sweep(out_dir: str = "profile_traces") -> str:
+    """Dump a ``jax.profiler`` trace of ONE warm fused sweep dispatch
+    (for inspecting that the pipeline really is a single device program).
+    Returns the trace directory."""
+    import jax
+
+    from repro.core.sampling import SamplingPlan
+    from repro.experiments import SweepSpec, run_sweep
+
+    from .simcpu_common import all_apps, get_engine
+
+    engine = get_engine()
+    apps = tuple(all_apps()[:2])
+    engine.build(apps)
+    spec = SweepSpec(apps=apps,
+                     plan=SamplingPlan.from_strings("rfv", "centroid"),
+                     config_indices=(0, 1))
+    run_sweep(engine, spec)                           # compile + fill
+    with jax.profiler.trace(out_dir):
+        run_sweep(engine, spec)
+    print(f"fused_sweep_profile,{out_dir},jax.profiler trace of one "
+          "warm fused sweep")
+    return out_dir

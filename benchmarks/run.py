@@ -94,6 +94,9 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=None,
                     help="force N XLA host devices (app-sharded sweeps); "
                     "must be set before jax initializes")
+    ap.add_argument("--profile", action="store_true",
+                    help="dump a jax.profiler trace of one warm fused "
+                    "sweep dispatch (dispatch-count inspection)")
     ap.add_argument("--trials", type=int, default=None,
                     help="largest Monte-Carlo trial count for the "
                     "streaming trials bench (default 100000, or 10000 "
@@ -125,6 +128,10 @@ def main() -> None:
         "kernels": kernels_bench.bench_kernels,
         "kmeans_batched": kmeans_batched_bench.bench_kmeans_batched,
         "estimators": estimators_bench.bench_estimators,
+        # registered after fig5/estimators so a combined --only run shares
+        # the process-wide engine (and its MemoBank) they already built
+        "fused_sweep": (lambda: estimators_bench.bench_fused_sweep(
+            quick=args.quick)),
         "trials_streaming": (lambda: trials_bench.bench_trials_streaming(
             trials=max_trials, quick=args.quick)),
     }
@@ -153,6 +160,14 @@ def main() -> None:
             bench_records[name] = {"seconds": round(time.time() - tb, 3),
                                    "error": f"{type(e).__name__}: {e}"}
             errors.append(name)
+
+    if args.profile:
+        print("# === fused sweep profiler trace ===", flush=True)
+        try:
+            estimators_bench.profile_fused_sweep()
+        except Exception as e:  # noqa: BLE001
+            print(f"fused_sweep_profile,ERROR,{type(e).__name__}: {e}")
+            errors.append("fused_sweep_profile")
 
     # ------------------------------------------------ claim validation
     print("# === claim validation (paper vs reproduction) ===")
@@ -219,8 +234,26 @@ def main() -> None:
               f"jitted StratumTables sweep estimation vs host numpy: "
               f"max rel err {re_['sweep_max_rel_err']:.2e} "
               f"(gate {sweep_bound:g}), "
-              f"{re_['sweep_speedup']:.2f}x host/device, "
-              f"x64={re_['sweep_x64']}")
+              f"{re_['staged_sweep_speedup']:.2f}x host/device "
+              f"(legacy staged row), x64={re_['sweep_x64']}")
+
+    rf = results.get("fused_sweep")
+    if rf:
+        # two-part gate: parity + ledger equality at every rung, and the
+        # fused megaprogram must beat the staged pipeline at (or below)
+        # the largest rung tested — the full paper matrix (10 apps x 7
+        # configs) on a non-quick run
+        fused_bound = 1e-6
+        won = rf["crossover"] is not None
+        check("sweep_device_crossover",
+              won and rf["max_rel_err"] <= fused_bound and rf["ledger_eq"],
+              (f"fused megaprogram >= 1x staged at "
+               f"{rf['crossover'][0]}x{rf['crossover'][1]} " if won
+               else f"fused never beat staged up to "
+               f"{rf['max_rung'][0]}x{rf['max_rung'][1]} ")
+              + f"(max rel err {rf['max_rel_err']:.1e} gate "
+              f"{fused_bound:g}, ledger_eq={rf['ledger_eq']}, "
+              f"{rf['devices']} device(s), quick={rf['quick']})")
 
     rtr = results.get("trials_streaming")
     if rtr:

@@ -35,8 +35,20 @@ python -m pytest -x -q tests/test_estimator_tables.py
 
 python -m pytest -x -q
 # bench smoke; the `estimators` leg gates the batched-vs-scalar claim row
-# (benchmarks/run.py exits non-zero on any FAILing claim)
-python -m benchmarks.run --quick --only fig5_config_sweep,kernels,kmeans_batched,estimators
+# and `fused_sweep` the megaprogram crossover/parity/ledger gate (it
+# reuses the engine fig5 built, so the ladder costs seconds, not a build)
+python -m benchmarks.run --quick --only fig5_config_sweep,kernels,kmeans_batched,estimators,fused_sweep
+
+# sharded fused-megaprogram smoke at reduced scale: the donated-buffer
+# program shard_maps over an ("app",) mesh of 8 forced host devices and
+# must match single-device results (parity + ledger gates inside the
+# bench claim row). When CI_FORCE_DEVICES is already exported the flag is
+# in XLA_FLAGS above; otherwise force 8 devices for this leg only.
+if [[ -n "${CI_FORCE_DEVICES:-}" ]]; then
+  python -m benchmarks.run --quick --only fused_sweep
+else
+  python -m benchmarks.run --quick --devices 8 --only fused_sweep
+fi
 
 # scaled-trials smoke: a chunked 10^4-trial streamed run through the
 # trial engine (keep_trials off -> bounded memory), gating the

@@ -48,13 +48,25 @@ def dalenius_gurney_strata(
     cuts = np.linspace(0, n, L + 1).round().astype(int)
     cuts[0], cuts[-1] = 0, n
 
+    # products(c) is called after every boundary move; per-(lo, hi)
+    # memoization makes each move cost two fresh segment stds instead of
+    # L, which is the difference between O(L * iters) and O(n * L *
+    # iters) std work on census-scale inputs (the fig5 bench hot spot)
+    seg_cache: dict[tuple[int, int], float] = {}
+
+    def product(lo: int, hi: int) -> float:
+        key = (lo, hi)
+        if key not in seg_cache:
+            seg = sorted_x[lo:hi]
+            w = seg.size / n
+            s = seg.std(ddof=1) if seg.size > 1 else 0.0
+            seg_cache[key] = w * s
+        return seg_cache[key]
+
     def products(c: np.ndarray) -> np.ndarray:
         out = np.empty(L)
         for h in range(L):
-            seg = sorted_x[c[h]:c[h + 1]]
-            w = seg.size / n
-            s = seg.std(ddof=1) if seg.size > 1 else 0.0
-            out[h] = w * s
+            out[h] = product(c[h], c[h + 1])
         return out
 
     for _ in range(max_iters):

@@ -357,6 +357,13 @@ class SelectionContext:
     gathers must clamp). ``member``/``order``/``offsets`` are lazy,
     cached on first read, so each policy materializes only the tables
     it actually dispatches on.
+
+    The context is namespace-agnostic: fields may be numpy arrays (the
+    staged host path) or jax tracers (the fused sweep megaprogram traces
+    selection in-program — ``repro.experiments.fused``); the derived
+    tables follow the input namespace. ``uniforms`` optionally carries
+    pre-drawn ``(A, L)`` uniforms for ``RandomUnit`` so a traced context
+    consumes the exact bits the host rng would have drawn.
     """
 
     labels: np.ndarray        # (A, n)
@@ -368,6 +375,7 @@ class SelectionContext:
     counts: np.ndarray        # (A, L) int
     num_strata: int
     seed: int = 0
+    uniforms: Optional[np.ndarray] = None    # (A, L) pre-drawn U[0,1)
     _member: Optional[np.ndarray] = dataclasses.field(
         default=None, repr=False)
     _order: Optional[np.ndarray] = dataclasses.field(
@@ -377,9 +385,10 @@ class SelectionContext:
     def member(self) -> np.ndarray:
         """(A, n, L) valid-membership mask (cached on first read)."""
         if self._member is None:
+            xp = _tables._ns(self.labels, self.valid)
             self._member = (
                 self.labels[:, :, None]
-                == np.arange(self.num_strata)[None, None, :]) \
+                == xp.arange(self.num_strata)[None, None, :]) \
                 & self.valid[:, :, None]
         return self._member
 
@@ -387,15 +396,16 @@ class SelectionContext:
     def order(self) -> np.ndarray:
         """(A, n) stratum-sorted gather table (cached on first read)."""
         if self._order is None:
-            self._order = np.argsort(
-                np.where(self.valid, self.labels, self.num_strata),
-                axis=1, kind="stable")
+            xp = _tables._ns(self.labels, self.valid)
+            self._order = _tables._argsort(
+                xp, xp.where(self.valid, self.labels, self.num_strata))
         return self._order
 
     @property
     def offsets(self) -> np.ndarray:
         """(A, L) per-stratum start positions into ``order``."""
-        return np.cumsum(self.counts, axis=1) - self.counts
+        xp = _tables._ns(self.counts)
+        return xp.cumsum(self.counts, axis=1) - self.counts
 
 
 def _np_segment_sums_counts(labels, valid, num_strata, values):
@@ -415,24 +425,28 @@ def _np_segment_sums_counts(labels, valid, num_strata, values):
 
 
 def build_selection_context(bank: StratumBank, *, seed: int = 0,
-                            summarize: Optional[Callable] = None
-                            ) -> SelectionContext:
+                            summarize: Optional[Callable] = None,
+                            uniforms=None) -> SelectionContext:
     """Selection context for a ``StratumBank``: ONE stratum-summary
     dispatch serves the counts, the mean-policy targets AND (for
     banks without explicit centroids) the DG stratum-mean centroids.
 
     ``summarize(labels, valid, L, values) -> (sums, counts)`` lets the
     engine route the summary through its ``segment_stats`` kernel
-    contract; the default is an exact float64 host bincount.
+    contract; the default is an exact float64 host bincount. Works on
+    numpy arrays and on jax tracers alike (the fused sweep megaprogram
+    builds its context in-trace, with ``uniforms`` carrying host-drawn
+    random-policy draws so picks match the staged path exactly).
     """
     summarize = summarize or _np_segment_sums_counts
     L = bank.num_strata
     labels, valid = bank.labels, bank.valid
     base_sums, countsf = summarize(labels, valid, L, bank.baseline)
-    base_means = base_sums / np.maximum(countsf, 1)
+    xp = _tables._ns(labels, valid, countsf)
+    base_means = base_sums / xp.maximum(countsf, 1)
     counts = countsf.astype(np.int64)
     feats = bank.feats if bank.feats is not None \
-        else np.asarray(bank.baseline)[:, :, None]
+        else xp.asarray(bank.baseline)[:, :, None]
     # EMPTY strata get a zero derived centroid but are masked out of
     # selection entirely, so no NaN ever reaches a distance computation
     cents = bank.centroids if bank.centroids is not None \
@@ -440,7 +454,7 @@ def build_selection_context(bank: StratumBank, *, seed: int = 0,
     return SelectionContext(
         labels=labels, valid=valid, feats=feats,
         centroids=cents, baseline=bank.baseline, base_means=base_means,
-        counts=counts, num_strata=L, seed=seed)
+        counts=counts, num_strata=L, seed=seed, uniforms=uniforms)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -454,9 +468,16 @@ class SelectionPolicy:
     ``TwoPhaseFlow`` entry point; the default builds a one-lane context
     and reuses the batched callable, so a plug-in policy only has to
     implement ``__call__``.
+
+    ``uses_uniforms`` declares that the policy consumes per-(app,
+    stratum) uniform draws (``SelectionContext.uniforms``): the fused
+    sweep program host-draws them with the policy's exact rng sequence
+    and feeds them into the trace, keeping traced picks equal to staged
+    picks without string dispatch on policy names.
     """
 
     name: ClassVar[str] = "?"
+    uses_uniforms: ClassVar[bool] = False
 
     def __call__(self, ctx: SelectionContext) -> np.ndarray:
         """(A, L) local pick positions for the stacked app axis."""
@@ -509,11 +530,20 @@ class Centroid(SelectionPolicy):
     def __call__(self, ctx: SelectionContext) -> np.ndarray:
         """Argmin of squared feature distance to the centroid, per
         stratum (masked to members; empty strata are masked out)."""
-        x2 = (ctx.feats ** 2).sum(axis=2)                   # (A, n)
-        c2 = (ctx.centroids ** 2).sum(axis=2)               # (A, L)
-        d2 = x2[:, :, None] - 2.0 * np.einsum(
-            "and,ald->anl", ctx.feats, ctx.centroids) + c2[:, None, :]
-        return np.where(ctx.member, d2, np.inf).argmin(axis=1)
+        xp = _tables._ns(ctx.feats, ctx.centroids)
+        # the expanded |x|^2 - 2<x,c> + |c|^2 form cancels catastrophically
+        # in float32 at census scale (d2 ~ 1e-5 out of O(1) terms), enough
+        # to flip near-boundary argmins between backends/compilations —
+        # accumulate in the namespace's widest float (f64 on the host and
+        # under x64; the canonical float via result_type(0.0) never warns)
+        dt = xp.result_type(0.0)
+        feats = xp.asarray(ctx.feats, dt)
+        cents = xp.asarray(ctx.centroids, dt)
+        x2 = (feats ** 2).sum(axis=2)                       # (A, n)
+        c2 = (cents ** 2).sum(axis=2)                       # (A, L)
+        d2 = x2[:, :, None] - 2.0 * xp.einsum(
+            "and,ald->anl", feats, cents) + c2[:, None, :]
+        return xp.where(ctx.member, d2, xp.inf).argmin(axis=1)
 
     def select_local(self, labels, *, features, centroids, baseline,
                      num_strata: int, seed: int = 0,
@@ -541,8 +571,9 @@ class StratumMean(SelectionPolicy):
 
     def __call__(self, ctx: SelectionContext) -> np.ndarray:
         """Argmin |baseline − stratum mean baseline| per stratum."""
-        d = np.abs(ctx.baseline[:, :, None] - ctx.base_means[:, None, :])
-        return np.where(ctx.member, d, np.inf).argmin(axis=1)
+        xp = _tables._ns(ctx.baseline, ctx.base_means)
+        d = xp.abs(ctx.baseline[:, :, None] - ctx.base_means[:, None, :])
+        return xp.where(ctx.member, d, xp.inf).argmin(axis=1)
 
     def select_local(self, labels, *, features, centroids, baseline,
                      num_strata: int, seed: int = 0,
@@ -565,20 +596,30 @@ class RandomUnit(SelectionPolicy):
     """
 
     name: ClassVar[str] = "random"
+    uses_uniforms: ClassVar[bool] = True
 
     per_stratum: int = 1
 
     def __call__(self, ctx: SelectionContext) -> np.ndarray:
-        """One uniform draw per (app, stratum) from the gather tables."""
-        rng = np.random.default_rng(ctx.seed)
-        u = rng.random(ctx.counts.shape)                    # (A, L)
-        pos = ctx.offsets + np.minimum(
+        """One uniform draw per (app, stratum) from the gather tables.
+
+        ``ctx.uniforms`` (when set) substitutes for the host rng draw —
+        the fused sweep program passes the SAME ``default_rng(seed)``
+        bits in as an array so traced picks equal staged picks.
+        """
+        xp = _tables._ns(ctx.counts, ctx.uniforms)
+        if ctx.uniforms is None:
+            u = np.random.default_rng(ctx.seed).random(
+                np.shape(ctx.counts))                       # (A, L)
+        else:
+            u = ctx.uniforms
+        pos = ctx.offsets + xp.minimum(
             (u * ctx.counts).astype(np.int64),
-            np.maximum(ctx.counts - 1, 0))
+            xp.maximum(ctx.counts - 1, 0))
         # trailing empty strata park offsets at the row width: clamp (the
         # pick is discarded by the caller's validity mask)
-        pos = np.minimum(pos, max(ctx.order.shape[1] - 1, 0))
-        return np.take_along_axis(ctx.order, pos, axis=1)
+        pos = xp.minimum(pos, max(ctx.order.shape[1] - 1, 0))
+        return xp.take_along_axis(ctx.order, pos, axis=1)
 
     def select_local(self, labels, *, features, centroids, baseline,
                      num_strata: int, seed: int = 0,
@@ -619,14 +660,21 @@ class RankedSetUnit(SelectionPolicy):
 
     def __call__(self, ctx: SelectionContext) -> np.ndarray:
         """Pick the unit at the configured baseline-CPI rank per stratum."""
-        # within-stratum CPI order: stable sort by (stratum, baseline)
-        primary = np.where(ctx.valid, ctx.labels, ctx.num_strata)
-        rs_order = np.lexsort((ctx.baseline, primary), axis=1)
-        rank = np.rint(self.rank_fraction
-                       * np.maximum(ctx.counts - 1, 0)).astype(np.int64)
-        pos = np.minimum(ctx.offsets + rank,
+        # within-stratum CPI order: stable sort by (stratum, baseline),
+        # spelled as composed stable argsorts (== np.lexsort) so the same
+        # code runs on numpy arrays and on jax tracers
+        xp = _tables._ns(ctx.labels, ctx.baseline)
+        primary = xp.where(ctx.valid, ctx.labels, ctx.num_strata)
+        by_base = _tables._argsort(xp, ctx.baseline)
+        rs_order = xp.take_along_axis(
+            by_base,
+            _tables._argsort(xp, xp.take_along_axis(primary, by_base,
+                                                    axis=1)), axis=1)
+        rank = xp.rint(self.rank_fraction
+                       * xp.maximum(ctx.counts - 1, 0)).astype(np.int64)
+        pos = xp.minimum(ctx.offsets + rank,
                          max(rs_order.shape[1] - 1, 0))
-        return np.take_along_axis(rs_order, pos, axis=1)
+        return xp.take_along_axis(rs_order, pos, axis=1)
 
 
 register_policy("centroid", Centroid)
@@ -644,15 +692,29 @@ _last_sweep_dispatch: Optional[dict] = None
 def last_sweep_dispatch() -> Optional[dict]:
     """Marker describing the most recent jitted sweep-estimate dispatch.
 
-    ``None`` until an ``Estimator.sweep_estimates`` program ran; else a
+    ``None`` until an ``Estimator.sweep_estimates`` program (or the
+    fused sweep megaprogram — ``repro.experiments.fused``) ran; else a
     dict with ``batch_shape`` (the (A, C) lane axes), ``num_strata``,
-    ``x64`` (whether the program ran in float64) and ``backend``. Only
-    the jitted device program writes it — there is no host fallback on
-    the sweep-estimate path, so tests can assert estimates really came
-    off-device.
+    ``x64`` (whether the program ran in float64), ``backend``,
+    ``fused`` (one megaprogram dispatch vs the staged estimate-only
+    program), ``donated`` (whether the runtime actually consumed the
+    donated memo buffers — backends without donation report False) and
+    ``count`` (dispatches since the last reset, so tests can assert a
+    sweep cost exactly ONE device program). Only the jitted device
+    programs write it — there is no host fallback on the sweep-estimate
+    path, so tests can assert estimates really came off-device.
     """
     return None if _last_sweep_dispatch is None \
         else dict(_last_sweep_dispatch)
+
+
+def _record_sweep_dispatch(**fields) -> None:
+    """Write the sweep-dispatch marker, accumulating ``count`` since the
+    last ``_reset_sweep_dispatch`` (one fused sweep must record 1)."""
+    global _last_sweep_dispatch
+    prior = 0 if _last_sweep_dispatch is None \
+        else _last_sweep_dispatch.get("count", 0)
+    _last_sweep_dispatch = {**fields, "count": prior + 1}
 
 
 def _reset_sweep_dispatch() -> None:
@@ -665,20 +727,11 @@ def _reset_sweep_dispatch() -> None:
 def _weighted_point_program(cpi, valid, weights, truth):
     """Jitted ``StratumTables`` program for stratified sweep estimates.
 
-    Lanes are (app, config): ``counts`` is the pick-validity mask, so
-    each occupied stratum holds exactly its one selected unit and
-    ``stratified_mean`` reduces to the covered-weight-renormalized
-    weighted mean the sweep reports. Returns ``(estimate, err_pct)``.
+    The staged spelling of ``Estimator.estimate_stage`` — one dispatch
+    whose whole body is the fusable tables→estimates stage. Returns
+    ``(estimate, err_pct)``.
     """
-    counts = jnp.broadcast_to(valid[:, None, :], cpi.shape
-                              ).astype(cpi.dtype)
-    t = _tables.StratumTables(
-        counts=counts, sums=jnp.where(counts > 0, cpi, 0.0),
-        sumsqs=jnp.zeros_like(cpi),
-        weights=jnp.broadcast_to(weights[:, None, :], cpi.shape))
-    est = _tables.stratified_mean(t)
-    err = 100.0 * jnp.abs(est - truth) / truth
-    return est, err
+    return Estimator.estimate_stage(cpi, valid, weights, truth)
 
 
 def _x64_sweep_programs() -> bool:
@@ -707,6 +760,24 @@ class Estimator:
 
     name: ClassVar[str] = "weighted_point"
 
+    @staticmethod
+    def estimate_stage(cpi, valid, weights, truth):
+        """The fusable tables→estimates stage: traceable, no dispatch.
+
+        Lanes are (app, config): ``sweep_point_tables`` turns the pick
+        mask into one-unit-per-stratum ``StratumTables`` and
+        ``stratified_mean`` reduces them to the covered-weight-
+        renormalized weighted mean; ``err_pct`` follows. Shared verbatim
+        by the staged jitted program (``sweep_estimates``) and the fused
+        sweep megaprogram (``repro.experiments.fused``), so the two
+        paths cannot drift. Returns ``(estimate, err_pct)``.
+        """
+        xp = _tables._ns(cpi, valid, weights, truth)
+        t = _tables.sweep_point_tables(cpi, valid, weights)
+        est = _tables.stratified_mean(t)
+        err = 100.0 * xp.abs(est - truth) / truth
+        return est, err
+
     def sweep_estimates(self, cpi, valid, weights, truth, *,
                         precision=None) -> tuple[np.ndarray, np.ndarray]:
         """(A, C) estimates + percent errors from one jitted dispatch.
@@ -721,7 +792,6 @@ class Estimator:
         """
         from ..precision import PrecisionPolicy
 
-        global _last_sweep_dispatch
         pp = precision if precision is not None \
             else PrecisionPolicy.host_parity()
         dt = pp.trace_dtype
@@ -729,11 +799,11 @@ class Estimator:
                 np.asarray(weights, dt), np.asarray(truth, dt))
         with pp.x64_context():
             est, err = _weighted_point_program(*args)
-        _last_sweep_dispatch = {
-            "batch_shape": tuple(np.shape(cpi)[:-1]),
-            "num_strata": int(np.shape(cpi)[-1]),
-            "x64": pp.needs_x64, "backend": jax.default_backend(),
-        }
+        _record_sweep_dispatch(
+            batch_shape=tuple(np.shape(cpi)[:-1]),
+            num_strata=int(np.shape(cpi)[-1]),
+            x64=pp.needs_x64, backend=jax.default_backend(),
+            fused=False, donated=False)
         return np.asarray(est), np.asarray(err)
 
 

@@ -44,6 +44,7 @@ __all__ = [
     "StratumTables",
     "stratum_tables",
     "tables_from_summaries",
+    "sweep_point_tables",
     "covered_weight",
     "total_weight",
     "stratified_mean",
@@ -313,6 +314,30 @@ def tables_from_summaries(summaries: Sequence) -> StratumTables:
         + counts * centered ** 2
     return StratumTables(counts=counts, sums=sums, sumsqs=sumsqs,
                          weights=weights, shift=shift)
+
+
+def sweep_point_tables(cpi, valid, weights) -> StratumTables:
+    """``StratumTables`` for a one-unit-per-stratum sweep, lane-wise.
+
+    ``cpi``: (A, C, L) per-stratum selected-unit CPI; ``valid``: (A, L)
+    pick validity; ``weights``: (A, L) stratum weights. Lanes are
+    (app, config): each occupied stratum holds exactly its one selected
+    unit — counts ARE the validity mask — so ``stratified_mean`` reduces
+    to the covered-weight-renormalized weighted mean the sweep reports.
+
+    This is the sweep estimators' fusable tables stage: counts come from
+    the pick mask directly, with no ``segment_stats`` dispatch (each
+    stratum contributes one known unit — there is nothing to segment;
+    see ``docs/kernels.md``). Namespace-agnostic: numpy in the host
+    path, tracers inside the staged jitted program and the fused sweep
+    megaprogram alike.
+    """
+    xp = _ns(cpi, valid, weights)
+    counts = xp.broadcast_to(valid[:, None, :], cpi.shape).astype(cpi.dtype)
+    return StratumTables(
+        counts=counts, sums=xp.where(counts > 0, cpi, 0.0),
+        sumsqs=xp.zeros_like(cpi),
+        weights=xp.broadcast_to(weights[:, None, :], cpi.shape))
 
 
 # -------------------------------------------------------------- estimators

@@ -15,6 +15,7 @@ through ``plan_selection_bank``/``run_sweep`` without engine edits.
 Legacy scheme/policy strings still work as deprecated shims.
 """
 
+from .fused import fused_sweep_program, run_fused_sweep
 from .engine import (NUM_STRATA, PHASE1_SEED, AppExperiment,
                      ExperimentEngine, SweepStack, plan_selection,
                      plan_selection_bank, scheme_selection,
@@ -29,6 +30,7 @@ __all__ = [
     "plan_selection", "plan_selection_bank",
     "scheme_selection", "scheme_selection_bank",
     "SweepSpec", "SweepRow", "ResultsTable", "run_sweep",
+    "fused_sweep_program", "run_fused_sweep",
     "SRS_SCHEME", "known_schemes",
     "TrialSpec", "TrialResult", "run_trials", "trial_uniforms",
     "SRS_DRAWS", "TRIAL_SCHEMES",

@@ -68,6 +68,10 @@ class SweepSpec:
     plan: Optional[sampling_plan.SamplingPlan] = None
     config_indices: Optional[tuple[int, ...]] = None   # None = all engine configs
     selection_seed: int = 0                  # rng seed for policy="random"
+    # stratified sweeps dispatch through the fused megaprogram
+    # (repro.experiments.fused) by default; False forces the staged
+    # selection → fill → estimate chain (debug / parity reference)
+    fused: bool = True
     # optional Monte-Carlo study riding along (see experiments.montecarlo):
     # rows at trials.config_index gain a 95th-percentile |error| column
     trials: Optional["TrialSpec"] = None     # noqa: F821
@@ -195,18 +199,38 @@ def _srs_stats(cpi: np.ndarray, valid: np.ndarray
     return mean, 100.0 * margin / np.abs(mean)
 
 
+def _warn_partial_coverage(spec: SweepSpec, valid: np.ndarray,
+                           weights: np.ndarray) -> None:
+    """Warn when selected units cover only part of the stratum weight
+    (the renormalized eq. (3) mean is then biased) — shared by the fused
+    and staged stratified paths so the diagnostic cannot drift."""
+    covered = np.where(valid, weights, 0.0).sum(axis=1)          # (A,)
+    total = weights.sum(axis=1)
+    low = covered < total * (1.0 - 1e-6)
+    if low.any():
+        import warnings
+        bad = [spec.apps[a] for a in np.flatnonzero(low)]
+        warnings.warn(
+            f"selected units cover only part of the stratum weight for "
+            f"{bad}; renormalizing biases those estimates",
+            UserWarning, stacklevel=3)
+
+
 def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
               mesh=None) -> ResultsTable:
     """Execute one sweep: ONE batched (optionally app-sharded) dispatch
     over all apps × requested configs (only those are simulated and
     ledger-charged).
 
-    Stratified sweeps dispatch on ``spec.plan`` only — selection via
-    ``plan_selection_bank`` and estimation via the plan estimator's
-    jitted ``StratumTables`` program (``sampling_plan
-    .last_sweep_dispatch`` records it), so estimates and percent errors
-    come off-device ready-made; no host-side weighted-mean reduction
-    remains on the path.
+    Stratified sweeps dispatch on ``spec.plan`` only. By default
+    (``spec.fused``) the whole selection → memo-fill → estimate pipeline
+    runs as ONE donated-buffer device program (``repro.experiments
+    .fused``); ``fused=False`` keeps the staged reference chain —
+    ``plan_selection_bank`` then ``MemoBank.fill`` then the estimator's
+    jitted ``StratumTables`` program. Either way ``sampling_plan
+    .last_sweep_dispatch`` records the dispatch and estimates + percent
+    errors come off-device ready-made; no host-side weighted-mean
+    reduction remains on the path.
     """
     exps = engine.build(spec.apps)
     stack = engine.stack(spec.apps)
@@ -223,21 +247,19 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
         ests, margins = _srs_stats(cpi, stack.idx1_valid)
         errs = 100.0 * np.abs(ests - truth) / truth
         n_units = stack.idx1_valid.sum(axis=1)
-    else:
+    elif spec.fused:                         # fused megaprogram (one dispatch)
+        from .fused import run_fused_sweep
+        ests, errs, valid, weights = run_fused_sweep(
+            engine, spec, exps, stack, cfgs, truth, mesh=mesh)
+        _warn_partial_coverage(spec, valid, weights)
+        margins = None
+        n_units = valid.sum(axis=1)
+    else:                                    # staged reference chain
         picks, valid, weights = plan_selection_bank(
             exps, spec.plan, seed=spec.selection_seed)
         cpi, _ = engine.memo.fill(stack.rows, picks, valid, cfgs,
                                   feats=stack.gather_feats(picks), mesh=mesh)
-        covered = np.where(valid, weights, 0.0).sum(axis=1)      # (A,)
-        total = weights.sum(axis=1)
-        low = covered < total * (1.0 - 1e-6)
-        if low.any():
-            import warnings
-            bad = [spec.apps[a] for a in np.flatnonzero(low)]
-            warnings.warn(
-                f"selected units cover only part of the stratum weight for "
-                f"{bad}; renormalizing biases those estimates",
-                UserWarning, stacklevel=2)
+        _warn_partial_coverage(spec, valid, weights)
         ests, errs = spec.plan.estimator.sweep_estimates(
             cpi, valid, weights, truth, precision=engine.precision)
         margins = None

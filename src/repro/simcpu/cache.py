@@ -55,11 +55,25 @@ class MemoBank:
         self.mask = np.zeros((0, 0, 0), bool)         # (A, C, N)
         self.cpi = np.zeros((0, 0, 0), np.float32)    # (A, C, N)
         self.charges = np.zeros((0, 0), np.int64)     # (A, C) miss counts
+        # bumped on every mask/cpi table mutation (content or shape);
+        # device-resident mirrors of the tables (the fused sweep's block
+        # cache) key their validity on it. Code that writes the tables
+        # directly — test/bench snapshot-restore helpers — must call
+        # ``touch()``.
+        self.version = 0
 
     # -- shape management ---------------------------------------------------
     @property
     def num_apps(self) -> int:
         return len(self.names)
+
+    def touch(self) -> None:
+        """Invalidate device-resident mirrors after direct table writes.
+
+        Every mutating method bumps ``version`` itself; only code that
+        assigns into ``mask``/``cpi`` directly (snapshot-restore helpers
+        in tests and benches) needs to call this."""
+        self.version += 1
 
     def _grow(self, a: int, c: int, n: int) -> None:
         a0, c0, n0 = self.mask.shape
@@ -72,6 +86,7 @@ class MemoBank:
         cpi[:a0, :c0, :n0] = self.cpi
         charges[:a0, :c0] = self.charges
         self.mask, self.cpi, self.charges = mask, cpi, charges
+        self.version += 1
 
     def add_app(self, name: str, n_regions: int,
                 ledger: Optional[Ledger] = None) -> int:
@@ -150,6 +165,7 @@ class MemoBank:
         self.cpi[sub] = np.where(miss, dense, blk)
         self.mask[sub] |= miss
         self.charges[sub] += n_miss
+        self.version += 1
         for i, row in enumerate(rows.tolist()):
             ledger = self.ledgers[row]
             if ledger is not None:
@@ -158,6 +174,92 @@ class MemoBank:
                                  np.broadcast_to(idx[:, None, :],
                                                  (r_n, c_n, k)), axis=2)
         return out, n_miss
+
+    # -- donated-buffer fused-fill contract ----------------------------------
+    def donation_block(self, rows, cfgs: Sequence[UarchConfig]
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(mask, cpi, cols) block for a donated fused sweep dispatch.
+
+        Extracts the ``(R, C, N)`` mask + value sub-block the fused
+        program (``repro.experiments.fused``) consumes as DONATED device
+        buffers: ownership transfers to the program — the caller must
+        not read these arrays after dispatch — and the updated block
+        comes back through ``absorb_block``. Fancy indexing copies, so
+        the bank's own tables are never aliased by donated memory.
+        """
+        rows = np.asarray(rows, np.int64)
+        cols = self.cols_for(cfgs)
+        sub = (rows[:, None], cols[None, :])
+        return self.mask[sub], self.cpi[sub], cols
+
+    def absorb_block(self, rows, cols, new_mask, new_cpi, n_miss,
+                     requested) -> None:
+        """Write back a fused program's updated block; account as
+        ``fill`` would, bitwise.
+
+        ``new_mask``/``new_cpi``: the (R, C, N) block returned by the
+        fused program (old block ∪ misses); ``n_miss``: its (R, C)
+        newly-charged counts; ``requested``: (R,) requested region-units
+        per row INCLUDING duplicates times configs (``fill``'s
+        ``valid.sum(axis=1) * C`` convention). Hit/miss counters, the
+        charge matrix and the per-app ledgers advance exactly as one
+        equivalent ``fill`` call — ledger totals are path-independent.
+        """
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        sub = (rows[:, None], cols[None, :])
+        n_miss = np.asarray(n_miss, np.int64)
+        requested = np.asarray(requested, np.int64)
+        self.cpi[sub] = np.asarray(new_cpi, np.float32)
+        self.mask[sub] = np.asarray(new_mask, bool)
+        self.charges[sub] += n_miss
+        self.version += 1
+        for i, row in enumerate(rows.tolist()):
+            row_miss = int(n_miss[i].sum())
+            self.miss_count[row] += row_miss
+            self.hit_count[row] += int(requested[i]) - row_miss
+            ledger = self.ledgers[row]
+            if ledger is not None and row_miss:
+                ledger.charge(row_miss)
+
+    def absorb_selected(self, rows, cols, picks, miss_sel, values, n_miss,
+                        requested) -> None:
+        """Write back a fused program's selected-unit results; account as
+        ``fill`` would, bitwise — without an (R, C, N) block transfer.
+
+        ``picks``: (R, K) picked region indices; ``miss_sel``: (R, C, K)
+        True where the pick was newly computed (invalid strata already
+        False); ``values``: (R, C, K) CPI at the picks (stored on hits,
+        freshly computed on misses) — only missed cells are written, so
+        the host tables end up identical to an ``absorb_block`` of the
+        full updated block. ``n_miss``/``requested`` follow the
+        ``absorb_block`` conventions (dedup-exact counts from the
+        program's dense request scatter).
+        """
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        picks = np.asarray(picks, np.int64)
+        miss_sel = np.asarray(miss_sel, bool)
+        values = np.asarray(values, np.float32)
+        n_miss = np.asarray(n_miss, np.int64)
+        requested = np.asarray(requested, np.int64)
+        r3 = np.broadcast_to(rows[:, None, None], miss_sel.shape)
+        c3 = np.broadcast_to(cols[None, :, None], miss_sel.shape)
+        i3 = np.broadcast_to(picks[:, None, :], miss_sel.shape)
+        if miss_sel.any():
+            self.cpi[r3[miss_sel], c3[miss_sel], i3[miss_sel]] = \
+                values[miss_sel]
+            self.mask[r3[miss_sel], c3[miss_sel], i3[miss_sel]] = True
+            self.version += 1
+        sub = (rows[:, None], cols[None, :])
+        self.charges[sub] += n_miss
+        for i, row in enumerate(rows.tolist()):
+            row_miss = int(n_miss[i].sum())
+            self.miss_count[row] += row_miss
+            self.hit_count[row] += int(requested[i]) - row_miss
+            ledger = self.ledgers[row]
+            if ledger is not None and row_miss:
+                ledger.charge(row_miss)
 
     # -- cross-device merge --------------------------------------------------
     def merge(self, other: "MemoBank") -> None:
@@ -182,6 +284,7 @@ class MemoBank:
             new = om & ~self.mask[sl]
             self.cpi[sl] = np.where(new, other.cpi[i], self.cpi[sl])
             self.mask[sl] |= om
+            self.version += 1
             self.charges[row, cols] += other.charges[i]
             self.hit_count[row] += other.hit_count[i]
             self.miss_count[row] += other.miss_count[i]

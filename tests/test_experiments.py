@@ -8,8 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core.clustering import kmeans, kmeans_batch
-from repro.core.sampling import (StratumSummary, summarize_strata,
-                                 weighted_point_estimate)
+from repro.core.sampling import (SamplingPlan, StratumSummary,
+                                 summarize_strata, weighted_point_estimate)
 from repro.experiments import ExperimentEngine, SweepSpec, run_sweep
 from repro.simcpu import (CONFIGS, REGION_LEN_INSTR, evaluate_regions,
                           evaluate_regions_batch, cpi_batch,
@@ -256,3 +256,105 @@ def test_summarize_strata_infers_count_from_weights():
     assert len(summ) == 3
     assert summ[2].n == 0                        # trailing empty stratum
     assert isinstance(summ[0], StratumSummary)
+
+
+# ------------------------------------------------- fused sweep megaprogram
+def _memo_state(memo):
+    return (memo.mask.copy(), memo.cpi.copy(), memo.charges.copy(),
+            list(memo.hit_count), list(memo.miss_count),
+            [None if l is None else (l.regions_simulated,
+                                     l.instructions_simulated)
+             for l in memo.ledgers])
+
+
+def _memo_reset(memo, state):
+    memo.mask[...], memo.cpi[...], memo.charges[...] = state[:3]
+    memo.hit_count[:], memo.miss_count[:] = state[3], state[4]
+    for ledger, vals in zip(memo.ledgers, state[5]):
+        if ledger is not None:
+            ledger.regions_simulated, ledger.instructions_simulated = vals
+    memo.touch()          # direct table writes: drop device-block mirrors
+
+
+def test_fused_sweep_matches_staged(engine):
+    """The fused megaprogram and the staged reference chain agree:
+    estimates to 1e-6 (XLA compiles the f32 perf model differently in
+    the two program contexts, so a few CPI cells land 1-2 ulps apart —
+    bitwise equality across compiles is not attainable), and the memo
+    mask, charge matrix, hit/miss counters and ledger totals BITWISE
+    (miss accounting is integer arithmetic, path-independent)."""
+    import dataclasses
+
+    cfg_idx = (0, 2, 5)
+    engine.memo.cols_for(tuple(engine.configs[i] for i in cfg_idx))
+    spec = SweepSpec(apps=(APP,),
+                     plan=SamplingPlan.from_strings("rfv", "centroid"),
+                     config_indices=cfg_idx)
+    before = _memo_state(engine.memo)
+    fused_table = run_sweep(engine, spec)
+    after_fused = _memo_state(engine.memo)
+    _memo_reset(engine.memo, before)
+    staged_table = run_sweep(engine,
+                             dataclasses.replace(spec, fused=False))
+    after_staged = _memo_state(engine.memo)
+    _memo_reset(engine.memo, before)
+
+    ef = fused_table.column("estimate")
+    es = staged_table.column("estimate")
+    np.testing.assert_allclose(ef, es, rtol=1e-6)
+    np.testing.assert_allclose(fused_table.column("err_pct"),
+                               staged_table.column("err_pct"), atol=1e-4)
+    np.testing.assert_array_equal(after_fused[0], after_staged[0])  # mask
+    np.testing.assert_array_equal(after_fused[2], after_staged[2])  # charges
+    assert after_fused[3] == after_staged[3]                 # hit counts
+    assert after_fused[4] == after_staged[4]                 # miss counts
+    assert after_fused[5] == after_staged[5]                 # ledger totals
+
+
+def test_fused_sweep_single_dispatch_marker(engine):
+    """One fused sweep costs exactly ONE device program dispatch."""
+    from repro.core.sampling import plan as plan_mod
+
+    plan_mod._reset_sweep_dispatch()
+    run_sweep(engine, SweepSpec(
+        apps=(APP,), plan=SamplingPlan.from_strings("rfv", "centroid"),
+        config_indices=(0, 3)))
+    marker = plan_mod.last_sweep_dispatch()
+    assert marker is not None
+    assert marker["fused"] is True
+    assert marker["count"] == 1
+    assert marker["batch_shape"] == (1, 2)
+    assert marker["num_strata"] == engine.num_strata
+
+
+def test_fused_sweep_donation_safety(engine):
+    """The memo blocks enter the megaprogram as donated buffers: the
+    dispatch marker records whether the runtime consumed them, and the
+    driver never reads a donated device array after dispatch (this test
+    would abort with a deleted-buffer error if it did). CPU XLA honors
+    donation; other backends may decline, so False is tolerated."""
+    from repro.core.sampling import plan as plan_mod
+
+    plan_mod._reset_sweep_dispatch()
+    run_sweep(engine, SweepSpec(
+        apps=(APP,), plan=SamplingPlan.from_strings("rfv", "centroid"),
+        config_indices=(0,)))
+    marker = plan_mod.last_sweep_dispatch()
+    assert isinstance(marker["donated"], bool)
+    if jax.default_backend() == "cpu":
+        assert marker["donated"] is True
+
+
+def test_staged_sweep_marker_not_fused(engine):
+    """The staged fallback records a non-fused, non-donated dispatch."""
+    import dataclasses
+    from repro.core.sampling import plan as plan_mod
+
+    plan_mod._reset_sweep_dispatch()
+    spec = SweepSpec(apps=(APP,),
+                     plan=SamplingPlan.from_strings("rfv", "centroid"),
+                     config_indices=(0,))
+    run_sweep(engine, dataclasses.replace(spec, fused=False))
+    marker = plan_mod.last_sweep_dispatch()
+    assert marker["fused"] is False
+    assert marker["donated"] is False
