@@ -17,6 +17,8 @@ import time
 
 RESULTS_PATH = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_results.json"
+HISTORY_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_history.jsonl"
 
 
 def _force_devices(n: int) -> None:
@@ -85,6 +87,39 @@ def write_results_json(benches: dict, claims: dict, ok: bool,
     print(f"# results written to {path.name}")
 
 
+def append_history(claims: dict, ok: bool, errors: list, total_s: float,
+                   path: pathlib.Path = HISTORY_PATH) -> None:
+    """Append one run record to the cross-PR perf trajectory ledger.
+
+    ``BENCH_history.jsonl`` is append-only (one JSON object per line,
+    committed to the repo, unlike the overwritten ``BENCH_results.json``
+    snapshot): each CI run adds its git SHA, UTC timestamp and claim
+    outcomes, so regressions are attributable to a commit by reading the
+    ledger alone."""
+    import datetime
+    import subprocess
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=path.parent, capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    entry = {
+        "git_sha": sha,
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "claims": {name: bool(c["pass"]) for name, c in claims.items()},
+        "overall_pass": bool(ok),
+        "errors": list(errors),
+        "total_seconds": round(total_s, 2),
+    }
+    with path.open("a") as fh:
+        fh.write(json.dumps(entry, sort_keys=True) + "\n")
+    print(f"# history entry appended to {path.name} ({sha})")
+
+
 def main() -> None:
     """CLI entry: run benches, validate claims, write BENCH_results.json."""
     ap = argparse.ArgumentParser()
@@ -134,6 +169,9 @@ def main() -> None:
             quick=args.quick)),
         "trials_streaming": (lambda: trials_bench.bench_trials_streaming(
             trials=max_trials, quick=args.quick)),
+        "checkpoint_overhead": (
+            lambda: trials_bench.bench_checkpoint_overhead(
+                quick=args.quick)),
     }
     if args.only:
         names = args.only.split(",")
@@ -272,6 +310,15 @@ def main() -> None:
               f"({top['trials_per_sec']:,.0f} trial-lanes/s, "
               f"{top['devices']} device(s), bounded memory)")
 
+    rco = results.get("checkpoint_overhead")
+    if rco:
+        check("checkpoint_overhead_small", rco["ratio"] < 0.05,
+              f"{rco['snapshots_per_study']} fleet snapshots x "
+              f"{rco['snapshot_seconds'] * 1e3:.1f}ms = "
+              f"{100 * rco['ratio']:.2f}% of the steady-state "
+              f"{rco['trials']}-trial run ({rco['run_seconds']}s, "
+              f"{rco['snapshot_mb']}MB state, gate < 5%)")
+
     # a bench that crashed is a failure even if no claim row references it
     check("no_bench_errors", not errors,
           "errors in: " + "|".join(errors) if errors else "all benches ran")
@@ -280,6 +327,7 @@ def main() -> None:
     print(f"benchmarks_total_s,{total_s:.1f},")
     print(f"benchmarks_overall,{'PASS' if ok else 'FAIL'},")
     write_results_json(bench_records, claims, ok, errors, total_s)
+    append_history(claims, ok, errors, total_s)
     # CI contract: any FAILing claim-validation row (or bench error) must
     # make the process exit non-zero.
     sys.exit(0 if ok else 1)

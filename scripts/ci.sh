@@ -53,5 +53,16 @@ fi
 # scaled-trials smoke: a chunked 10^4-trial streamed run through the
 # trial engine (keep_trials off -> bounded memory), gating the
 # chunked==unchunked bitwise and coverage-calibration claim rows; under
-# CI_FORCE_DEVICES=8 the ("app","trial") mesh reduction runs for real
-python -m benchmarks.run --quick --trials 10000 --only trials_streaming
+# CI_FORCE_DEVICES=8 the ("app","trial") mesh reduction runs for real.
+# checkpoint_overhead gates the fault-tolerance tax (< 5% of the run)
+# and appends this run's claim outcomes to BENCH_history.jsonl
+python -m benchmarks.run --quick --trials 10000 \
+  --only trials_streaming,checkpoint_overhead
+
+# fault-tolerance leg: the full resume-equivalence matrix (slow-marked
+# scheme sweeps; the pytest.ini addopts excludes them from the tier-1
+# run above, the explicit -m here overrides it). Under CI_FORCE_DEVICES=8
+# this includes the sharded + elastic device-drop scenarios (multidevice
+# marker); tight deadline — the whole leg is minutes, not hours
+timeout 1200 python -m pytest -q -m "slow or multidevice" \
+  tests/test_fault_tolerance.py

@@ -22,6 +22,9 @@ from .engine import (NUM_STRATA, PHASE1_SEED, AppExperiment,
                      scheme_selection_bank)
 from .montecarlo import (SRS_DRAWS, TRIAL_SCHEMES, TrialResult, TrialSpec,
                          run_trials, trial_uniforms)
+from .resumable import (FleetReport, run_sweep_resumable,
+                        run_trials_resumable, supervise_sweep,
+                        supervise_trials)
 from .sweep import (SRS_SCHEME, ResultsTable, SweepRow, SweepSpec,
                     known_schemes, run_sweep)
 
@@ -35,4 +38,6 @@ __all__ = [
     "TrialSpec", "TrialResult", "run_trials", "trial_uniforms",
     "SRS_DRAWS", "TRIAL_SCHEMES",
     "NUM_STRATA", "PHASE1_SEED",
+    "FleetReport", "run_sweep_resumable", "run_trials_resumable",
+    "supervise_sweep", "supervise_trials",
 ]

@@ -274,10 +274,19 @@ def _streaming_program(chunk_fn, mesh, *, kb: int, n_chunks: int,
                        keep: bool):
     """Build (and cache) the chunked-scan trial program for one geometry.
 
-    The returned callable takes ``(key, app_ids, truth, crit, *tables)``
-    — app-leading arrays except the replicated key — and returns
-    ``(TrialStats, ys)`` where ``ys`` is the per-chunk dense stack
-    ``(n_chunks, A, chunk)`` triple when ``keep`` else ``None``.
+    The returned callable takes ``(key, chunk0, app_ids, truth, crit,
+    *tables)`` — app-leading arrays except the replicated key and the
+    traced scalar ``chunk0`` — and returns ``(TrialStats, ys)`` where
+    ``ys`` is the per-chunk dense stack ``(n_chunks, A, chunk)`` triple
+    when ``keep`` else ``None``.
+
+    ``chunk0`` offsets the whole scan by that many chunks into the
+    global PRNG-block sequence: chunk ``c`` of the scan draws the blocks
+    of global chunk ``chunk0 + c``. A full run passes 0; the resumable
+    driver (``repro.experiments.resumable``) replays any suffix of a
+    run's chunk sequence from a checkpoint — the scan fold is
+    position-based, so segment-at-a-time accumulation reproduces the
+    same per-chunk outcomes bitwise.
 
     Geometry: each scan step evaluates one chunk of ``kb`` PRNG blocks
     (``kb * TRIAL_BLOCK`` trials). Under an ``("app", "trial")`` mesh the
@@ -297,14 +306,14 @@ def _streaming_program(chunk_fn, mesh, *, kb: int, n_chunks: int,
     kbd = kb // ntd                 # blocks per trial-device per chunk
     tc = kbd * TRIAL_BLOCK          # trials per trial-device per chunk
 
-    def prog(key, app_ids, truth, crit, *tables):
+    def prog(key, chunk0, app_ids, truth, crit, *tables):
         ti = (jax.lax.axis_index(trial_axis)
               if trial_axis is not None else 0)
         stats0 = sampling_tables.trial_stats_init(
             (app_ids.shape[0],), accum_dtype=np.dtype(accum), xp=jnp)
 
         def step(carry, c):
-            b0 = c * kb + ti * kbd
+            b0 = (chunk0 + c) * kb + ti * kbd
             u = _run_uniforms(key, b0, kbd, app_ids, draws, dt)
             est, err, half, covered = chunk_fn(u, truth, crit, *tables)
             valid = (b0 * TRIAL_BLOCK + jnp.arange(tc)) < trials
@@ -326,7 +335,7 @@ def _streaming_program(chunk_fn, mesh, *, kb: int, n_chunks: int,
     app_axis, trial_axis = app_trial_axes(mesh)
     ys_spec = (P(None, app_axis, trial_axis),) * 3 if keep else None
     return make_app_trial_sharded(
-        prog, mesh, replicated=(0,), out_specs=(P(app_axis), ys_spec),
+        prog, mesh, replicated=(0, 1), out_specs=(P(app_axis), ys_spec),
         trim=_trim_streaming_out)
 
 
@@ -367,45 +376,30 @@ def _stratum_key_counts(baseline: np.ndarray, labels: np.ndarray,
     return key, cnts
 
 
-def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
-               apps: Optional[Sequence[str]] = None,
-               mesh=None, stratifiers: Optional[dict] = None) -> TrialResult:
-    """Monte-Carlo selection trials, one streaming program per scheme.
+def _scheme_setup(engine: ExperimentEngine, spec: TrialSpec, apps, mesh,
+                  stratifiers: Optional[dict] = None):
+    """Resolve everything a scheme's chunk program consumes on the host.
 
-    No host-side per-app or per-trial loops: each scheme is one chunked
-    ``lax.scan`` dispatch (optionally ``shard_map``-ped over an
-    ``("app",)`` or ``("app", "trial")`` mesh) that folds every chunk of
-    trials into the additive ``TrialStats`` accumulator — including the
-    per-trial CI half-width and its empirical coverage of the census
-    truth (see ``TrialResult``). Memory is bounded by one chunk at any
-    trial count; results are invariant to the chunking and the mesh.
+    Returns ``(truth, pp, setups)`` — the (A,) census truth at the study
+    config, the resolved ``PrecisionPolicy`` and, per scheme, the tuple
+    ``(chunk_fn, draws, crit, tables)`` the streaming program binds.
 
-    ``stratifiers`` optionally maps scheme names to configured
-    ``Stratifier`` *instances* (``run_sweep`` passes its plan's), so a
-    parameterized plug-in studies the same stratification its sweep
-    used; unmapped schemes are built from the registry with defaults.
+    Shared by ``run_trials`` and the resumable driver
+    (``repro.experiments.resumable``) so an interrupted run re-derives
+    bitwise-identical program inputs: the stratum tables, value pools
+    and critical values are pure functions of the engine build, and the
+    memo fills here are the trial path's ONLY charged work (re-running
+    them after a restore is a pure cache hit, keeping ledger totals
+    path-independent).
     """
-    apps = tuple(apps or APP_NAMES)
     exps = engine.build(apps)
     stack = engine.stack(apps)
-    mesh = engine.mesh if mesh is None else mesh
     ci = spec.config_index
     cfg = engine.configs[ci]
     l_n = engine.num_strata
     pp = resolve_precision(spec.precision, engine.precision)
     tdt = pp.trace_dtype
     truth = np.stack([e.truth[ci] for e in exps])
-
-    if mesh is None:
-        ntd = 1
-    else:
-        from ..distributed.appaxis import app_trial_axes
-        _, trial_axis = app_trial_axes(mesh)
-        ntd = 1 if trial_axis is None else mesh.shape[trial_axis]
-    kb, n_chunks = _chunk_blocks(spec, ntd)
-    keep = (spec.keep_trials if spec.keep_trials is not None
-            else spec.trials <= _KEEP_TRIALS_MAX)
-    app_ids = np.arange(len(apps), dtype=np.int32)
 
     # registry-resolved stratifications: each scheme name becomes a
     # Stratifier whose StratumBank declares its labels, weights and
@@ -428,52 +422,91 @@ def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
                                   mesh=mesh)
         p1_pool = cpi[:, 0, :].astype(tdt)                 # (A, n1_max)
 
-    stats: dict[str, sampling_tables.TrialStats] = {}
-    estimates: dict[str, np.ndarray] = {}
-    errors: dict[str, np.ndarray] = {}
-    halves: dict[str, np.ndarray] = {}
+    setups: dict[str, tuple] = {}
     for scheme in spec.schemes:
         if scheme == SRS_DRAWS:
             n = spec.units_per_trial
             dfs = np.full(len(apps), float(n - 1) if n < 30 else np.inf)
             crit = critical_values(spec.confidence, dfs).astype(tdt)
-            chunk_fn, draws = _srs_chunk, n
-            tables = (census, stack.n_regions)
-        else:
-            bank = banks[scheme]
-            labels, lv = bank.labels, bank.valid
-            weights = bank.weights
-            if scheme in charged:                 # phase-1 pool, paid once
-                pool = p1_pool
-            elif bank.pool is None:               # census-indexed labels
-                pool = census
-            else:                                 # census values at pool idx
-                pool = np.take_along_axis(census, bank.pool, axis=1)
-            baseline = bank.baseline.astype(tdt)
-            # ONE stratum-summary dispatch serves the collapsed-pairs
-            # ordering key AND the gather-table counts
-            key, countsf = _stratum_key_counts(baseline, labels, lv, l_n,
-                                               precision=pp)
-            order, offsets, counts = stratum_tables(labels, lv, l_n,
-                                                    counts=countsf)
-            sorted_vals = np.take_along_axis(pool, order, axis=1)
-            # collapsed-pairs CI geometry: occupied strata first, in
-            # baseline-CPI key order (static per app)
-            key_order = np.argsort(key, axis=1, kind="stable")
-            w_sorted = np.take_along_axis(weights, key_order, axis=1)
-            n_occ = (counts > 0).sum(axis=1)
-            dfs = np.maximum(n_occ - n_occ // 2, 1).astype(np.float64)
-            crit = critical_values(spec.confidence, dfs).astype(tdt)
-            chunk_fn, draws = _stratified_chunk, l_n
-            tables = (sorted_vals, offsets.astype(np.int32),
-                      counts.astype(np.int32), weights.astype(tdt),
-                      key_order.astype(np.int32), w_sorted.astype(tdt),
-                      n_occ.astype(np.int32))
+            setups[scheme] = (_srs_chunk, n, crit,
+                              (census, stack.n_regions))
+            continue
+        bank = banks[scheme]
+        labels, lv = bank.labels, bank.valid
+        weights = bank.weights
+        if scheme in charged:                 # phase-1 pool, paid once
+            pool = p1_pool
+        elif bank.pool is None:               # census-indexed labels
+            pool = census
+        else:                                 # census values at pool idx
+            pool = np.take_along_axis(census, bank.pool, axis=1)
+        baseline = bank.baseline.astype(tdt)
+        # ONE stratum-summary dispatch serves the collapsed-pairs
+        # ordering key AND the gather-table counts
+        key, countsf = _stratum_key_counts(baseline, labels, lv, l_n,
+                                           precision=pp)
+        order, offsets, counts = stratum_tables(labels, lv, l_n,
+                                                counts=countsf)
+        sorted_vals = np.take_along_axis(pool, order, axis=1)
+        # collapsed-pairs CI geometry: occupied strata first, in
+        # baseline-CPI key order (static per app)
+        key_order = np.argsort(key, axis=1, kind="stable")
+        w_sorted = np.take_along_axis(weights, key_order, axis=1)
+        n_occ = (counts > 0).sum(axis=1)
+        dfs = np.maximum(n_occ - n_occ // 2, 1).astype(np.float64)
+        crit = critical_values(spec.confidence, dfs).astype(tdt)
+        setups[scheme] = (_stratified_chunk, l_n, crit,
+                          (sorted_vals, offsets.astype(np.int32),
+                           counts.astype(np.int32), weights.astype(tdt),
+                           key_order.astype(np.int32), w_sorted.astype(tdt),
+                           n_occ.astype(np.int32)))
+    return truth, pp, setups
+
+
+def run_trials(engine: ExperimentEngine, spec: TrialSpec = TrialSpec(),
+               apps: Optional[Sequence[str]] = None,
+               mesh=None, stratifiers: Optional[dict] = None) -> TrialResult:
+    """Monte-Carlo selection trials, one streaming program per scheme.
+
+    No host-side per-app or per-trial loops: each scheme is one chunked
+    ``lax.scan`` dispatch (optionally ``shard_map``-ped over an
+    ``("app",)`` or ``("app", "trial")`` mesh) that folds every chunk of
+    trials into the additive ``TrialStats`` accumulator — including the
+    per-trial CI half-width and its empirical coverage of the census
+    truth (see ``TrialResult``). Memory is bounded by one chunk at any
+    trial count; results are invariant to the chunking and the mesh.
+
+    ``stratifiers`` optionally maps scheme names to configured
+    ``Stratifier`` *instances* (``run_sweep`` passes its plan's), so a
+    parameterized plug-in studies the same stratification its sweep
+    used; unmapped schemes are built from the registry with defaults.
+    """
+    apps = tuple(apps or APP_NAMES)
+    mesh = engine.mesh if mesh is None else mesh
+    if mesh is None:
+        ntd = 1
+    else:
+        from ..distributed.appaxis import app_trial_axes
+        _, trial_axis = app_trial_axes(mesh)
+        ntd = 1 if trial_axis is None else mesh.shape[trial_axis]
+    kb, n_chunks = _chunk_blocks(spec, ntd)
+    keep = (spec.keep_trials if spec.keep_trials is not None
+            else spec.trials <= _KEEP_TRIALS_MAX)
+    app_ids = np.arange(len(apps), dtype=np.int32)
+    truth, pp, setups = _scheme_setup(engine, spec, apps, mesh, stratifiers)
+    tdt = pp.trace_dtype
+
+    stats: dict[str, sampling_tables.TrialStats] = {}
+    estimates: dict[str, np.ndarray] = {}
+    errors: dict[str, np.ndarray] = {}
+    halves: dict[str, np.ndarray] = {}
+    for scheme in spec.schemes:
+        chunk_fn, draws, crit, tables = setups[scheme]
         program = _streaming_program(
             chunk_fn, mesh, kb=kb, n_chunks=n_chunks, trials=spec.trials,
             draws=draws, trace=pp.trace, accum=pp.accum, keep=keep)
         with pp.x64_context():
-            st, ys = program(trial_key(spec, scheme), app_ids,
+            st, ys = program(trial_key(spec, scheme), np.int32(0), app_ids,
                              truth.astype(tdt), crit, *tables)
             if mesh is None:
                 st, ys = _trim_streaming_out((st, ys), len(apps))

@@ -38,21 +38,25 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return Mesh(grid, axes)
 
 
-def make_app_mesh(max_devices: Optional[int] = None) -> Mesh:
+def make_app_mesh(max_devices: Optional[int] = None, *,
+                  devices: Optional[Sequence] = None) -> Mesh:
     """1-D ``("app",)`` mesh for app-sharded sweeps (experiment engine).
 
     The application axis of a stacked sweep is pure data parallelism:
     lanes never communicate, so any device count works — the engine pads
-    the app axis up to it by edge replication.
+    the app axis up to it by edge replication. ``devices`` overrides the
+    pool (the elastic supervisor passes the surviving subset after a
+    simulated host loss); default is every local device.
     """
-    devs = jax.devices()
+    devs = list(devices) if devices is not None else jax.devices()
     n = len(devs) if max_devices is None else max(1, min(max_devices,
                                                          len(devs)))
     return Mesh(np.asarray(devs[:n]), ("app",))
 
 
 def make_app_trial_mesh(app_devices: int = 1,
-                        max_devices: Optional[int] = None) -> Mesh:
+                        max_devices: Optional[int] = None, *,
+                        devices: Optional[Sequence] = None) -> Mesh:
     """2-D ``("app", "trial")`` mesh for the streaming Monte-Carlo engine.
 
     ``app_devices`` lanes shard the application axis (pure data
@@ -60,9 +64,10 @@ def make_app_trial_mesh(app_devices: int = 1,
     trial axis, across which each scan chunk's PRNG blocks split and the
     additive ``TrialStats`` accumulator is ``psum``-merged
     (``repro.distributed.appaxis.make_app_trial_sharded``). Devices that
-    do not fill the rectangle are left idle.
+    do not fill the rectangle are left idle. ``devices`` overrides the
+    pool (elastic supervisor's surviving subset).
     """
-    devs = jax.devices()
+    devs = list(devices) if devices is not None else jax.devices()
     n = len(devs) if max_devices is None else max(1, min(max_devices,
                                                          len(devs)))
     app = max(1, min(app_devices, n))

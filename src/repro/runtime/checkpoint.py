@@ -3,14 +3,22 @@
 Design points for the 1000+-node regime:
 
 * **atomicity** — checkpoints are written to ``step_N.tmp/`` and renamed
-  into place; a crash mid-write never corrupts the latest checkpoint;
+  into place; a crash mid-write never corrupts the latest checkpoint
+  (``fault_hook`` lets the fault-injection harness die *inside* the
+  write to prove it);
 * **manifest** — a JSON manifest records the pytree structure, per-leaf
-  dtypes/shapes and the data seed/step, so restore can validate before
-  loading and the data pipeline resumes at the exact batch;
+  dtypes/shapes and caller metadata, and restore validates the manifest
+  — expected run identity AND every leaf's shape — BEFORE touching the
+  array archive, so a mismatched or half-garbage checkpoint fails fast
+  as ``ManifestMismatch`` instead of loading;
 * **sharding-aware restore** — leaves are ``device_put`` against the
   *current* mesh's shardings, so a job restarted on a different topology
   (elastic re-mesh) re-shards transparently;
-* **retention** — keep the last K checkpoints (default 3).
+* **retention** — keep the last K checkpoints (default 3);
+* **MemoBank snapshots** — ``save_memobank``/``restore_memobank`` wrap
+  the sweep engine's memo cache (mask + value blocks, charge matrix,
+  ledger totals, ``version``) so a resumed sweep's cost accounting is
+  bitwise-equal to an uninterrupted run's.
 """
 
 from __future__ import annotations
@@ -18,7 +26,7 @@ from __future__ import annotations
 import json
 import shutil
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import numpy as np
@@ -26,6 +34,12 @@ import numpy as np
 PyTree = Any
 
 _SEP = "::"
+
+
+class ManifestMismatch(ValueError):
+    """The checkpoint manifest does not match what the caller expects
+    (wrong run identity, missing leaves, or leaf-shape drift) — raised
+    BEFORE any array data is read."""
 
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
@@ -37,7 +51,17 @@ def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
 
 
 def save_checkpoint(directory: str | Path, step: int, tree: PyTree,
-                    *, extra: Optional[dict] = None, keep: int = 3) -> Path:
+                    *, extra: Optional[dict] = None, keep: int = 3,
+                    fault_hook: Optional[Callable[[str, Path], None]] = None
+                    ) -> Path:
+    """Write ``tree`` + ``extra`` metadata as ``step_N/``, atomically.
+
+    ``fault_hook(stage, tmpdir)`` is called mid-write — after the array
+    archive lands (``stage="arrays"``) and after the manifest lands
+    (``stage="manifest"``), both BEFORE the atomic rename — so the
+    fault-injection harness can corrupt the tmp dir and crash exactly
+    where a real host would: the previous checkpoint must survive.
+    """
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     tmp = directory / f"step_{step}.tmp"
@@ -49,6 +73,8 @@ def save_checkpoint(directory: str | Path, step: int, tree: PyTree,
     flat = _flatten(tree)
     np.savez(tmp / "arrays.npz", **{k.replace("/", _SEP): v
                                     for k, v in flat.items()})
+    if fault_hook is not None:
+        fault_hook("arrays", tmp)
     manifest = {
         "step": step,
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
@@ -56,6 +82,8 @@ def save_checkpoint(directory: str | Path, step: int, tree: PyTree,
         "extra": extra or {},
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if fault_hook is not None:
+        fault_hook("manifest", tmp)
     if final.exists():
         shutil.rmtree(final)
     tmp.rename(final)                       # atomic publish
@@ -78,13 +106,40 @@ def latest_step(directory: str | Path) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _jsonable(value):
+    """Round-trip through JSON so tuples/np scalars compare equal to what
+    the manifest stored."""
+    return json.loads(json.dumps(value, default=str))
+
+
+def read_manifest(directory: str | Path, *, step: Optional[int] = None
+                  ) -> dict:
+    """The manifest dict of ``step`` (default: latest) — metadata-only
+    access, never touches the array archive."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    return json.loads(
+        (directory / f"step_{step}" / "manifest.json").read_text())
+
+
 def restore_checkpoint(directory: str | Path, template: PyTree,
                        *, step: Optional[int] = None,
-                       shardings: Optional[PyTree] = None
+                       shardings: Optional[PyTree] = None,
+                       expect: Optional[dict] = None
                        ) -> tuple[PyTree, dict]:
-    """Restore into the structure of ``template``. ``shardings`` (a pytree
-    of jax.sharding.Sharding matching template) re-shards for the current
-    mesh; None keeps host arrays."""
+    """Restore into the structure of ``template``.
+
+    Validation is manifest-first: ``expect`` (a dict that must match the
+    manifest's ``extra`` key-for-key — the run-identity contract) and
+    every template leaf's presence + shape are checked against the JSON
+    manifest BEFORE ``arrays.npz`` is opened; any mismatch raises
+    ``ManifestMismatch`` without reading array data. ``shardings`` (a
+    pytree of jax.sharding.Sharding matching template) re-shards for the
+    current mesh; None keeps host arrays.
+    """
     directory = Path(directory)
     if step is None:
         step = latest_step(directory)
@@ -92,23 +147,71 @@ def restore_checkpoint(directory: str | Path, template: PyTree,
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = directory / f"step_{step}"
     manifest = json.loads((path / "manifest.json").read_text())
-    data = np.load(path / "arrays.npz")
+
+    if expect:
+        stored = manifest.get("extra", {})
+        for key, want in expect.items():
+            got = stored.get(key)
+            if got != _jsonable(want):
+                raise ManifestMismatch(
+                    f"checkpoint step {step} was written by a different "
+                    f"run: extra[{key!r}] is {got!r}, expected "
+                    f"{_jsonable(want)!r}")
 
     leaves_t, treedef = jax.tree_util.tree_flatten(template)
     paths = [jax.tree_util.keystr(p) for p, _ in
              jax.tree_util.tree_leaves_with_path(template)]
+    man_leaves = manifest["leaves"]
+    for key, tmpl in zip(paths, leaves_t):
+        k = key.replace("/", _SEP)
+        if k not in man_leaves:
+            raise ManifestMismatch(f"checkpoint missing leaf {key}")
+        if tuple(man_leaves[k]["shape"]) != tuple(np.shape(tmpl)):
+            raise ManifestMismatch(
+                f"shape mismatch for {key}: "
+                f"{tuple(man_leaves[k]['shape'])} vs {np.shape(tmpl)}")
+
+    data = np.load(path / "arrays.npz")
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(leaves_t))
-
     out = []
     for key, tmpl, sh in zip(paths, leaves_t, shard_leaves):
-        k = key.replace("/", _SEP)
-        if k not in data:
-            raise KeyError(f"checkpoint missing leaf {key}")
-        arr = data[k]
-        if tuple(arr.shape) != tuple(tmpl.shape):
-            raise ValueError(f"shape mismatch for {key}: "
-                             f"{arr.shape} vs {tmpl.shape}")
-        arr = arr.astype(tmpl.dtype)
+        arr = data[key.replace("/", _SEP)]
+        arr = arr.astype(np.asarray(tmpl).dtype)
         out.append(jax.device_put(arr, sh) if sh is not None else arr)
     return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+
+# ---------------------------------------------------------------- MemoBank
+def save_memobank(directory: str | Path, step: int, bank,
+                  *, extra: Optional[dict] = None, keep: int = 3,
+                  fault_hook=None) -> Path:
+    """Snapshot a ``repro.simcpu.MemoBank`` (mask + CPI blocks, charge
+    matrix, hit/miss counters, per-app ledger totals, ``version``) as one
+    atomic checkpoint; the bank's identity metadata (app names, region
+    counts, config reprs) rides in the manifest for restore validation."""
+    tree, meta = bank.state()
+    merged = dict(extra or {})
+    merged["memobank"] = meta
+    return save_checkpoint(directory, step, tree, extra=merged, keep=keep,
+                           fault_hook=fault_hook)
+
+
+def restore_memobank(directory: str | Path, bank, *,
+                     universe: Sequence = (), step: Optional[int] = None,
+                     expect: Optional[dict] = None) -> dict:
+    """Restore a ``save_memobank`` snapshot INTO ``bank`` (same apps, any
+    config-column order — ``universe`` supplies the config objects the
+    manifest's reprs resolve against). Validates manifest identity before
+    loading; returns the checkpoint's ``extra`` metadata."""
+    manifest = read_manifest(directory, step=step)
+    meta = manifest.get("extra", {}).get("memobank")
+    if meta is None:
+        raise ManifestMismatch(
+            f"checkpoint in {directory} holds no memobank snapshot")
+    bank.prepare_restore(meta, universe=universe)
+    tree, _ = bank.state()
+    restored, extra = restore_checkpoint(
+        directory, tree, step=step, expect=expect)
+    bank.load_state(restored, meta, universe=universe)
+    return extra

@@ -56,6 +56,30 @@ def plan_mesh(n_devices: int, *, model_parallel: int = 16,
     raise ValueError(f"cannot build a mesh from {n_devices} devices")
 
 
+def plan_app_mesh(n_devices: int) -> MeshPlan:
+    """1-D ``("app",)`` plan over the healthy pool — the sweep engine's
+    mesh. App lanes are pure data parallelism (they never communicate),
+    so ANY device count works: the engine pads the app axis up to it."""
+    if n_devices < 1:
+        raise ValueError(f"cannot build a mesh from {n_devices} devices")
+    return MeshPlan(shape=(int(n_devices),), axes=("app",))
+
+
+def plan_app_trial_mesh(n_devices: int, *, app_devices: int = 1) -> MeshPlan:
+    """2-D ``("app", "trial")`` plan for the streaming trial engine.
+
+    Keeps the requested app-parallel degree when the pool allows it
+    (clamped to the pool); the trial axis absorbs the change — exactly
+    the data-axis-absorbs-shrink rule of ``plan_mesh``, with "trial" in
+    the data role. Devices that do not fill the rectangle idle.
+    """
+    if n_devices < 1:
+        raise ValueError(f"cannot build a mesh from {n_devices} devices")
+    app = max(1, min(int(app_devices), int(n_devices)))
+    trial = int(n_devices) // app
+    return MeshPlan(shape=(app, trial), axes=("app", "trial"))
+
+
 def build_mesh(plan: MeshPlan,
                devices: Optional[Sequence] = None) -> Mesh:
     devs = list(devices if devices is not None else jax.devices())
@@ -76,15 +100,30 @@ def reshard(tree: PyTree, new_shardings: PyTree) -> PyTree:
 class ElasticRunner:
     """Bookkeeping for failure-driven re-meshing.
 
-    ``on_failure(surviving_devices)`` returns the new mesh; callers then
+    ``on_pool_change(n_devices)`` returns the new mesh plan; callers then
     reshard state + re-lower. Tracks topology history for postmortems.
+
+    ``mesh_kind`` selects the planner: ``"data_model"`` (the default
+    training-style grid, degraded via ``model_parallel``), ``"app"``
+    (the sweep engine's 1-D mesh) or ``"app_trial"`` (the streaming
+    trial engine's 2-D mesh, app degree held at ``app_devices``).
     """
 
     model_parallel: int = 16
+    mesh_kind: str = "data_model"
+    app_devices: int = 1
     history: list = dataclasses.field(default_factory=list)
 
     def on_pool_change(self, n_devices: int) -> MeshPlan:
-        plan = plan_mesh(n_devices, model_parallel=self.model_parallel)
+        if self.mesh_kind == "app":
+            plan = plan_app_mesh(n_devices)
+        elif self.mesh_kind == "app_trial":
+            plan = plan_app_trial_mesh(n_devices,
+                                       app_devices=self.app_devices)
+        elif self.mesh_kind == "data_model":
+            plan = plan_mesh(n_devices, model_parallel=self.model_parallel)
+        else:
+            raise ValueError(f"unknown mesh_kind {self.mesh_kind!r}")
         self.history.append({"n_devices": n_devices,
                              "shape": plan.shape})
         return plan

@@ -69,6 +69,41 @@ class StragglerDetector:
         return dt > med + self.k * max(q3 - q1, 1e-9)
 
 
+@dataclasses.dataclass
+class QuantumHealth:
+    """Per-quantum wall-time monitor for the resumable sweep supervisor.
+
+    The checkpointed drivers report ``(quantum_index, seconds)`` after
+    every restart quantum; durations feed a rolling ``StepTimer`` window
+    and the median+k·IQR ``StragglerDetector``, so a supervised fleet
+    run ends with a postmortem trace: which quanta ran, how long, and
+    which were straggling *before* any fault fired.
+    """
+
+    timer: StepTimer = dataclasses.field(default_factory=StepTimer)
+    detector: StragglerDetector = dataclasses.field(
+        default_factory=StragglerDetector)
+    quanta: list = dataclasses.field(default_factory=list)
+    stragglers: list = dataclasses.field(default_factory=list)
+
+    def record(self, quantum: int, seconds: float) -> bool:
+        """Fold one quantum's duration in; True if it straggled."""
+        slow = self.detector.is_straggler(self.timer.times, seconds)
+        self.timer.record(seconds)
+        self.quanta.append({"quantum": int(quantum),
+                            "seconds": float(seconds),
+                            "straggler": bool(slow)})
+        if slow:
+            self.stragglers.append((int(quantum), float(seconds)))
+        return slow
+
+    def summary(self) -> dict:
+        """Totals for reports: quanta recorded, wall seconds, stragglers."""
+        total = float(sum(q["seconds"] for q in self.quanta))
+        return {"quanta": len(self.quanta), "seconds": total,
+                "stragglers": len(self.stragglers)}
+
+
 def stratified_steptime_estimate(times, strata_labels, *, num_strata: int,
                                  confidence: float = 0.95):
     """Mean step time + CI from a stratified sample of profiled steps."""

@@ -261,6 +261,101 @@ class MemoBank:
             if ledger is not None and row_miss:
                 ledger.charge(row_miss)
 
+    # -- snapshot / restore (the checkpointed-fleet contract) ----------------
+    def state(self) -> tuple[dict, dict]:
+        """``(tree, meta)`` snapshot of the bank's full mutable state.
+
+        ``tree`` is a checkpointable array pytree — mask + CPI tables,
+        the charge matrix, hit/miss counters, per-app ledger totals and
+        the ``version`` counter; ``meta`` is the JSON-able identity
+        (app names, region counts, config reprs — ``UarchConfig`` reprs
+        are unique via their ``name`` field) a restore validates and
+        resolves columns against. Restoring ``state()`` into an
+        identically-built bank reproduces every later fill bitwise,
+        including the cost accounting.
+        """
+        regions = [0 if l is None else int(l.regions_simulated)
+                   for l in self.ledgers]
+        instr = [0 if l is None else int(l.instructions_simulated)
+                 for l in self.ledgers]
+        tree = {
+            "mask": self.mask.copy(),
+            "cpi": self.cpi.copy(),
+            "charges": self.charges.copy(),
+            "hit_count": np.asarray(self.hit_count, np.int64),
+            "miss_count": np.asarray(self.miss_count, np.int64),
+            "ledger_regions": np.asarray(regions, np.int64),
+            "ledger_instr": np.asarray(instr, np.int64),
+            "version": np.asarray(self.version, np.int64),
+        }
+        meta = {"names": list(self.names),
+                "n_regions": [int(n) for n in self.n_regions],
+                "configs": [repr(c) for c in self.configs]}
+        return tree, meta
+
+    def prepare_restore(self, meta: dict, *, universe: Sequence = ()
+                        ) -> np.ndarray:
+        """Validate a snapshot's identity against this bank and align the
+        config axis: grows columns so every snapshot config has a local
+        column (objects resolved by repr from ``universe`` + the bank's
+        own configs). Returns the (C_snapshot,) local column index per
+        snapshot column. Raises ``ValueError`` on any identity drift —
+        app set, region counts, unknown configs, or local columns the
+        snapshot does not cover (their state would be inconsistent)."""
+        if list(meta["names"]) != self.names:
+            raise ValueError(
+                f"memobank snapshot is for apps {meta['names']}, "
+                f"this bank holds {self.names}")
+        if [int(n) for n in meta["n_regions"]] != \
+                [int(n) for n in self.n_regions]:
+            raise ValueError("memobank snapshot region counts differ")
+        by_repr = {repr(c): c for c in list(self.configs) + list(universe)}
+        missing = [r for r in meta["configs"] if r not in by_repr]
+        if missing:
+            raise ValueError(
+                f"snapshot configs not resolvable from the given universe:"
+                f" {missing}")
+        snap = set(meta["configs"])
+        extra = [repr(c) for c in self.configs if repr(c) not in snap]
+        if extra:
+            raise ValueError(
+                f"bank holds config columns the snapshot does not cover "
+                f"(restore would leave them inconsistent): {extra}")
+        return self.cols_for([by_repr[r] for r in meta["configs"]])
+
+    def load_state(self, tree: dict, meta: dict, *,
+                   universe: Sequence = ()) -> None:
+        """Overwrite this bank's state with a ``state()`` snapshot.
+
+        The bank must hold the same apps (a deterministic engine rebuild
+        does); config columns may be fewer or permuted — they are grown/
+        aligned via ``prepare_restore``. Every piece of cost accounting
+        (charges, hit/miss counters, ledger totals) is REPLACED by the
+        snapshot's, so re-fills performed since construction (e.g. the
+        engine's phase-1 build fill, re-charged on restart) are not
+        double-counted. ``version`` restores exactly as saved.
+        """
+        cols = self.prepare_restore(meta, universe=universe)
+        self.mask[:, cols, :] = np.asarray(tree["mask"], bool)
+        self.cpi[:, cols, :] = np.asarray(tree["cpi"], np.float32)
+        self.charges[:, cols] = np.asarray(tree["charges"], np.int64)
+        self.hit_count = [int(x) for x in np.asarray(tree["hit_count"])]
+        self.miss_count = [int(x) for x in np.asarray(tree["miss_count"])]
+        regions = np.asarray(tree["ledger_regions"])
+        instr = np.asarray(tree["ledger_instr"])
+        for i, ledger in enumerate(self.ledgers):
+            if ledger is not None:
+                ledger.regions_simulated = int(regions[i])
+                ledger.instructions_simulated = int(instr[i])
+        # version restores exactly in the fresh-rebuild case (the bank
+        # never reached the saved version, so no device-resident mirror
+        # can be stamped with it); rolling BACK a bank that already
+        # advanced past the snapshot must instead move forward, or a
+        # stale fused-block mirror stamped at the saved version would
+        # revalidate against different table contents
+        saved = int(np.asarray(tree["version"]))
+        self.version = saved if saved >= self.version else self.version + 1
+
     # -- cross-device merge --------------------------------------------------
     def merge(self, other: "MemoBank") -> None:
         """Fold a device-local bank into this one.

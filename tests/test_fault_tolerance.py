@@ -1,0 +1,334 @@
+"""Elastic checkpointed fleet gates: resume == uninterrupted, bitwise.
+
+The headline claim of the fault-tolerance subsystem
+(``repro.experiments.resumable`` + ``repro.runtime.{faults, checkpoint,
+elastic, health}``): a sweep or Monte-Carlo study killed at randomized
+restart quanta — cleanly after a checkpoint publishes, before it is
+written, or mid-write with the tmp dir corrupted — and resumed
+(possibly on a shrunken device pool, re-meshed elastically) produces
+bitwise-identical estimates, ledger charge totals and ``TrialStats``
+moments to the same run uninterrupted.
+
+Equivalence discipline (see ``repro.experiments.resumable``):
+
+* killed/resumed vs uninterrupted **of the same blocking**: bitwise on
+  everything, including float moment sums (identical summation order);
+* vs a **different blocking** (the plain drivers, or an elastic
+  re-mesh changing the reduction order): integer stats leaves and
+  dense per-trial arrays stay bitwise, float moments agree to
+  summation order (allclose).
+
+The sharded legs run under ``CI_FORCE_DEVICES=8`` (``scripts/ci.sh``);
+the wider scheme matrix is marked ``slow`` for the dedicated CI leg.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.sampling.plan import SamplingPlan
+from repro.experiments import (ExperimentEngine, SweepSpec, TrialSpec,
+                               run_sweep, run_sweep_resumable, run_trials,
+                               run_trials_resumable, supervise_sweep,
+                               supervise_trials)
+from repro.experiments.montecarlo import TRIAL_BLOCK
+from repro.runtime.checkpoint import (ManifestMismatch, latest_step,
+                                      restore_checkpoint, save_checkpoint)
+from repro.runtime.faults import (FAULT_KINDS, FaultEvent, FaultPlan,
+                                  HostLoss)
+
+APPS = ("505.mcf_r", "520.omnetpp_r")
+CONFIGS = (0, 6)
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _capture_engines():
+    """A ``make_engine`` for the supervisors that records every engine it
+    builds, so tests can inspect the final attempt's memo bank."""
+    engines = []
+
+    def make(mesh):
+        eng = ExperimentEngine(mesh=mesh)
+        engines.append(eng)
+        return eng
+
+    return engines, make
+
+
+def _sweep_spec(scheme, policy, fused):
+    if scheme == "srs":
+        return SweepSpec(apps=APPS, config_indices=CONFIGS, fused=fused)
+    return SweepSpec(apps=APPS,
+                     plan=SamplingPlan.from_strings(scheme, policy),
+                     config_indices=CONFIGS, fused=fused)
+
+
+def _assert_rows_bitwise(got, want):
+    assert len(got.rows) == len(want.rows)
+    for r, b in zip(got.rows, want.rows):
+        assert (r.app, r.scheme, r.config_index) == \
+               (b.app, b.scheme, b.config_index)
+        assert np.float64(r.estimate).tobytes() == \
+               np.float64(b.estimate).tobytes()
+        assert np.float64(r.err_pct).tobytes() == \
+               np.float64(b.err_pct).tobytes()
+        assert r.n_units == b.n_units
+        if b.margin_pct is not None:
+            assert np.float64(r.margin_pct).tobytes() == \
+                   np.float64(b.margin_pct).tobytes()
+
+
+def _assert_stats_equal(got, want, *, exact_floats):
+    """Every TrialStats leaf: integers bitwise always; floats bitwise for
+    same-blocking comparisons, to summation order across blockings."""
+    leaves_g = jax.tree_util.tree_flatten_with_path(got)[0]
+    leaves_w = jax.tree_util.tree_flatten_with_path(want)[0]
+    assert len(leaves_g) == len(leaves_w)
+    for (path, g), (_, w) in zip(leaves_g, leaves_w):
+        g, w = np.asarray(g), np.asarray(w)
+        name = jax.tree_util.keystr(path)
+        assert g.dtype == w.dtype and g.shape == w.shape, name
+        if np.issubdtype(g.dtype, np.integer) or exact_floats:
+            assert g.tobytes() == w.tobytes(), name
+        else:
+            np.testing.assert_allclose(g, w, rtol=1e-5, err_msg=name)
+
+
+def _assert_memo_equal(bank_a, bank_b, *, keys=None):
+    tree_a, meta_a = bank_a.state()
+    tree_b, meta_b = bank_b.state()
+    assert meta_a == meta_b
+    # `version` counts table mutations, which restart attempts legally
+    # repeat (rebuild fill -> overwrite); everything observable is keyed
+    for k in (keys if keys is not None else
+              [k for k in tree_a if k != "version"]):
+        np.testing.assert_array_equal(np.asarray(tree_a[k]),
+                                      np.asarray(tree_b[k]), err_msg=k)
+
+
+# ------------------------------------------------------- fault plan units
+def test_fault_plan_random_is_deterministic():
+    a = FaultPlan.random(5, 16, kills=4, max_devices_lost=3)
+    b = FaultPlan.random(5, 16, kills=4, max_devices_lost=3)
+    assert a == b
+    assert len(a.events) == 4
+    assert [e.quantum for e in a.events] == \
+           sorted({e.quantum for e in a.events})
+    assert all(e.kind in FAULT_KINDS for e in a.events)
+    assert all(0 <= e.devices_lost <= 3 for e in a.events)
+    assert FaultPlan.random(6, 16, kills=4) != a
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("meteor", 0)
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultEvent("kill", -1)
+
+
+def test_injector_fires_events_in_order():
+    plan = FaultPlan((FaultEvent("kill", 1, devices_lost=2),
+                      FaultEvent("kill_dirty", 0)))    # sorts to front
+    inj = plan.injector()
+    assert [e.quantum for e in inj.pending] == [0, 1]
+    with pytest.raises(HostLoss):
+        inj.quantum_computed()                 # kill_dirty@0
+    inj.on_resume(0)                           # nothing was checkpointed
+    inj.quantum_computed()                     # q0 recomputes cleanly
+    inj.quantum_checkpointed()
+    inj.quantum_computed()
+    with pytest.raises(HostLoss) as err:       # kill@1 after q1 publishes
+        inj.quantum_checkpointed()
+    assert err.value.devices_lost == 2 and err.value.quantum == 1
+    assert not inj.pending
+    assert [e.kind for e in inj.fired] == ["kill_dirty", "kill"]
+
+
+def test_plan_tail_beyond_run_never_fires():
+    inj = FaultPlan((FaultEvent("kill", 9),)).injector()
+    for _ in range(4):                         # a 4-quantum run
+        inj.quantum_computed()
+        inj.quantum_checkpointed()
+    assert len(inj.pending) == 1 and not inj.fired
+
+
+# -------------------------------------------------- checkpoint atomicity
+def test_corrupt_mid_write_keeps_previous_checkpoint_restorable(tmp_path):
+    """A crash that truncates the half-written archive must leave the
+    previously published checkpoint fully restorable (atomic rename)."""
+    tree0 = {"x": np.arange(8, dtype=np.int64)}
+    save_checkpoint(tmp_path, 0, tree0, extra={"next_quantum": 1})
+    inj = FaultPlan((FaultEvent("corrupt", 1),)).injector()
+    inj.on_resume(1)
+    with pytest.raises(HostLoss, match="mid-checkpoint-write"):
+        save_checkpoint(tmp_path, 1, {"x": np.arange(8, dtype=np.int64) * 2},
+                        extra={"next_quantum": 2}, fault_hook=inj.hook)
+    # the corrupt tmp dir exists but was never published
+    assert (tmp_path / "step_1.tmp").exists()
+    assert latest_step(tmp_path) == 0
+    restored, extra = restore_checkpoint(tmp_path, tree0)
+    assert extra["next_quantum"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["x"]), tree0["x"])
+
+
+def test_manifest_mismatch_raises_before_reading_arrays(tmp_path):
+    """Identity validation is manifest-first: with the array archive
+    replaced by garbage, every mismatching restore still raises
+    ``ManifestMismatch`` — proving no array data is read before the
+    identity checks pass."""
+    tree = {"x": np.arange(4, dtype=np.float32)}
+    save_checkpoint(tmp_path, 0, tree, extra={"run": {"kind": "sweep"}})
+    (tmp_path / "step_0" / "arrays.npz").write_bytes(b"not-a-zipfile")
+    with pytest.raises(ManifestMismatch, match="extra"):
+        restore_checkpoint(tmp_path, tree, expect={"run": {"kind": "trial"}})
+    with pytest.raises(ManifestMismatch, match="shape"):
+        restore_checkpoint(tmp_path, {"x": np.zeros((9, 9), np.float32)})
+    with pytest.raises(ManifestMismatch, match="missing"):
+        restore_checkpoint(tmp_path, {"y": np.arange(4, dtype=np.float32)})
+
+
+# ------------------------------------------------- sweeps: resume == run
+SWEEP_MATRIX = [
+    pytest.param("srs", None, True, 5, id="srs"),
+    pytest.param("rfv", "centroid", True, 6, id="rfv-fused"),
+    pytest.param("bbv", "centroid", True, 7, id="bbv-fused",
+                 marks=pytest.mark.slow),
+    pytest.param("dg", "centroid", True, 8, id="dg-fused",
+                 marks=pytest.mark.slow),
+    pytest.param("rfv", "centroid", False, 9, id="rfv-staged",
+                 marks=pytest.mark.slow),
+]
+
+
+@pytest.mark.parametrize("scheme,policy,fused,seed", SWEEP_MATRIX)
+def test_sweep_killed_and_resumed_is_bitwise_identical(
+        tmp_path, scheme, policy, fused, seed):
+    """The headline gate: >= 3 randomized fault points (kinds drawn from
+    all three failure modes) across the quantum grid; the supervised run
+    must equal the uninterrupted run bitwise — estimates, errors, memo
+    mask, charge matrix, ledger totals, hit/miss counters."""
+    spec = _sweep_spec(scheme, policy, fused)
+    n_quanta = len(APPS) * len(CONFIGS)        # app_block=1, config_block=1
+    plan = FaultPlan.random(seed, n_quanta, kills=3)
+    assert len(plan.events) == 3
+
+    eng_u = ExperimentEngine()
+    uninterrupted = run_sweep_resumable(eng_u, spec, tmp_path / "u",
+                                        app_block=1, config_block=1)
+
+    engines, make = _capture_engines()
+    res, rep = supervise_sweep(make, spec, tmp_path / "f", faults=plan,
+                               app_block=1, config_block=1)
+    assert rep.restarts == 3                   # every planned fault fired
+    assert len(rep.quanta) >= n_quanta         # health trace saw the work
+
+    _assert_rows_bitwise(res, uninterrupted)
+    _assert_memo_equal(engines[-1].memo, eng_u.memo)
+
+    # deterministic policies are blocking-invariant: the plain unblocked
+    # driver agrees bitwise too, and charges are path-independent
+    eng_p = ExperimentEngine()
+    _assert_rows_bitwise(res, run_sweep(eng_p, spec))
+    _assert_memo_equal(engines[-1].memo, eng_p.memo,
+                       keys=["mask", "charges", "ledger_regions",
+                             "ledger_instr"])
+
+
+def test_sweep_checkpoint_identity_guards_resume(tmp_path):
+    """A directory holding a different run's checkpoints refuses to
+    resume (manifest-first), instead of silently mixing runs."""
+    spec = _sweep_spec("rfv", "centroid", True)
+    run_sweep_resumable(ExperimentEngine(), spec, tmp_path,
+                        app_block=1, config_block=1)
+    other = _sweep_spec("rfv", "mean", True)
+    with pytest.raises(ManifestMismatch):
+        run_sweep_resumable(ExperimentEngine(), other, tmp_path,
+                            app_block=1, config_block=1)
+
+
+# ------------------------------------------------- trials: resume == run
+def _trials_spec():
+    # chunk_size=TRIAL_BLOCK -> 1 block/chunk, 2 chunks; with
+    # segment_trials=256 that is 2 segments x 4 schemes = 8 quanta
+    return TrialSpec(trials=512, chunk_size=TRIAL_BLOCK, keep_trials=True)
+
+
+def _assert_trials_equal(got, want, *, exact_floats):
+    for s in want.spec.schemes:
+        _assert_stats_equal(got.stats[s], want.stats[s],
+                            exact_floats=exact_floats)
+        for field in ("estimates", "errors", "half_widths"):
+            a = getattr(got, field)[s]
+            b = getattr(want, field)[s]
+            assert a.dtype == b.dtype and a.shape == b.shape
+            assert a.tobytes() == b.tobytes(), (s, field)
+
+
+def test_trials_killed_and_resumed_is_bitwise_identical(tmp_path):
+    """Monte-Carlo headline gate: every paper-matrix scheme killed and
+    resumed at >= 4 randomized segment boundaries reproduces every
+    ``TrialStats`` leaf and dense per-trial array bitwise."""
+    spec = _trials_spec()
+    plan = FaultPlan.random(12, 8, kills=4)
+    assert len(plan.events) == 4
+
+    uninterrupted = run_trials_resumable(ExperimentEngine(), spec,
+                                         tmp_path / "u", apps=APPS,
+                                         segment_trials=256)
+    engines, make = _capture_engines()
+    res, rep = supervise_trials(make, spec, tmp_path / "f", apps=APPS,
+                                faults=plan, segment_trials=256)
+    assert rep.restarts == 4
+    _assert_trials_equal(res, uninterrupted, exact_floats=True)
+
+    # vs the plain driver's different blocking (one 4096-trial chunk):
+    # dense per-trial arrays and integer leaves stay bitwise (the PRNG
+    # block contract), float moments agree to summation order
+    plain = run_trials(ExperimentEngine(),
+                       dataclasses.replace(spec, chunk_size=None),
+                       apps=APPS)
+    _assert_trials_equal(res, plain, exact_floats=False)
+
+
+# ----------------------------------------- sharded + elastic device drop
+@needs_devices
+@pytest.mark.multidevice
+def test_sharded_sweep_with_device_drops_matches_single_device(tmp_path):
+    """8-device app-sharded fleet loses 5 devices, then 2 more (ending
+    on a single unmeshed device): every elastic re-plan must keep the
+    estimates bitwise-equal to the plain single-device sweep."""
+    spec = _sweep_spec("rfv", "centroid", True)
+    plan = FaultPlan((FaultEvent("kill", 1, devices_lost=5),
+                      FaultEvent("kill_dirty", 2, devices_lost=2)))
+    engines, make = _capture_engines()
+    res, rep = supervise_sweep(make, spec, tmp_path, faults=plan,
+                               app_block=1, config_block=1)
+    assert [a["n_devices"] for a in rep.attempts] == [8, 3, 1]
+    assert rep.attempts[-1]["outcome"] == "completed"
+    eng_p = ExperimentEngine()                 # no mesh: single device
+    _assert_rows_bitwise(res, run_sweep(eng_p, spec))
+    _assert_memo_equal(engines[-1].memo, eng_p.memo,
+                       keys=["mask", "charges", "ledger_regions",
+                             "ledger_instr"])
+
+
+@needs_devices
+@pytest.mark.multidevice
+def test_sharded_trials_with_device_drop_matches_single_device(tmp_path):
+    """(app x trial)-sharded streaming trials survive a mid-run loss of
+    half the pool (the trial axis re-plans 4 -> 2 lanes between scheme
+    quanta): integer stats and dense per-trial arrays stay bitwise vs an
+    unsharded run; float moment sums agree to psum order."""
+    spec = TrialSpec(trials=1024, keep_trials=True)   # kb=16: 4 and 2 lanes
+    plan = FaultPlan((FaultEvent("kill", 1, devices_lost=4),))
+    res, rep = supervise_trials(
+        lambda mesh: ExperimentEngine(mesh=mesh), spec, tmp_path,
+        apps=APPS, faults=plan, app_devices=2)
+    assert [a["n_devices"] for a in rep.attempts] == [8, 4]
+    single = run_trials(ExperimentEngine(), spec, apps=APPS, mesh=None)
+    _assert_trials_equal(res, single, exact_floats=False)
