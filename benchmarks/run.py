@@ -142,7 +142,7 @@ def main() -> None:
         _force_devices(args.devices)
 
     from . import (estimators_bench, kernels_bench, kmeans_batched_bench,
-                   paper_figs, trials_bench)
+                   paper_figs, serving_bench, trials_bench)
 
     max_trials = args.trials if args.trials is not None \
         else (10_000 if args.quick else 100_000)
@@ -172,6 +172,7 @@ def main() -> None:
         "checkpoint_overhead": (
             lambda: trials_bench.bench_checkpoint_overhead(
                 quick=args.quick)),
+        "serving": (lambda: serving_bench.bench_serving(quick=args.quick)),
     }
     if args.only:
         names = args.only.split(",")
@@ -272,8 +273,10 @@ def main() -> None:
               f"jitted StratumTables sweep estimation vs host numpy: "
               f"max rel err {re_['sweep_max_rel_err']:.2e} "
               f"(gate {sweep_bound:g}), "
-              f"{re_['staged_sweep_speedup']:.2f}x host/device "
-              f"(legacy staged row), x64={re_['sweep_x64']}")
+              f"{re_['staged_sweep_speedup']:.2f}x host/device at 10x7 "
+              f"(launch-bound) vs "
+              f"{re_.get('staged_sweep_speedup_large', float('nan')):.2f}x "
+              f"at service scale, x64={re_['sweep_x64']}")
 
     rf = results.get("fused_sweep")
     if rf:
@@ -318,6 +321,26 @@ def main() -> None:
               f"{100 * rco['ratio']:.2f}% of the steady-state "
               f"{rco['trials']}-trial run ({rco['run_seconds']}s, "
               f"{rco['snapshot_mb']}MB state, gate < 5%)")
+
+    rs = results.get("serving")
+    if rs:
+        check("serving_coalesced_bitwise", rs["bitwise"],
+              "coalesced stacked dispatches == serial run_sweep bitwise "
+              "(estimates + ledger charge totals) at every K rung")
+        # throughput gates the launch-bound rung (smallest apps) where
+        # coalescing's launch amortization is the measured effect; quick
+        # runs only smoke the machinery (2 reps, cold-heavy), so the
+        # gate applies to full runs
+        k8 = rs.get("speedup_k8") or 0.0
+        gate = 2.0 if not rs.get("quick") else 0.5
+        check("serving_coalesced_speedup", k8 >= gate,
+              f"coalesced K=8 {k8:.2f}x vs serial (gate {gate:g}x, "
+              f"quick={rs.get('quick')}; smallest-app launch-bound rung)")
+        check("serving_eviction_bounded",
+              rs["eviction_bounded"] and rs["eviction_ledger_exact"],
+              f"peak resident {rs['peak_resident_cols']} <= cap "
+              f"{rs['memo_cap']} ({rs['evicted_cols']} evictions), "
+              f"ledger exact={rs['eviction_ledger_exact']} under spill")
 
     # a bench that crashed is a failure even if no claim row references it
     check("no_bench_errors", not errors,

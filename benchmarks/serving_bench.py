@@ -1,0 +1,222 @@
+"""Sweep-as-a-service benchmark: coalescing throughput, latency, and
+bounded-memory eviction.
+
+Three measurements over the shared process-wide engine:
+
+* **Coalesced vs serial** — K same-shape sweep requests dispatched as
+  ONE stacked fused launch (``run_coalesced_sweeps``) vs K warm serial
+  ``run_sweep`` calls, at K in ``COALESCE_KS``. Both paths time the
+  steady state (memo warm, programs compiled, device mirrors chained);
+  the K ladder runs on the two smallest-population apps — the
+  launch-bound regime coalescing exists for, where per-request dispatch
+  overhead dominates compute — with a default-apps K=8 context row
+  showing the compute-bound end. The claim row gates a >= 2x throughput
+  win at K=8 on a full run, and also verifies the coalesced results +
+  ledger totals are BITWISE equal to serial.
+* **Service stream** — a deterministic mixed request stream through
+  ``SweepService`` ticks: latency p50/p95, request throughput, and the
+  lifetime memo cache-hit rate.
+* **Eviction-bounded run** — the same stream under ``memo_cap`` with
+  host-spill: resident memo columns must stay at/below the cap after
+  every tick while ledger totals stay exact (spilled columns restore
+  free).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.sampling.plan import RFVClusters, RandomUnit, SamplingPlan
+from repro.experiments import SweepSpec, run_sweep
+from repro.serving import SweepService, run_coalesced_sweeps
+from repro.serving.cli import synthetic_stream
+from repro.simcpu.workload import APP_SPECS
+
+from .estimators_bench import _ledger_totals, _memo_restore, _memo_snapshot
+from .simcpu_common import all_apps, get_engine
+
+COALESCE_KS = (2, 8, 32)
+COALESCE_KS_QUICK = (2, 8)
+REPS = 9
+REPS_QUICK = 2
+STREAM_N = 48
+STREAM_N_QUICK = 12
+TICK = 8
+MEMO_CAP = 2
+
+
+def _coalesce_specs(apps, k: int) -> list[SweepSpec]:
+    """K same-shape requests (one group): same plan/apps/configs,
+    distinct selection seeds."""
+    plan = SamplingPlan(RFVClusters(), RandomUnit())
+    return [SweepSpec(apps=apps, plan=plan, config_indices=(0, 1, 2),
+                      selection_seed=s) for s in range(k)]
+
+
+def _small_apps(n: int = 2) -> tuple:
+    """The n smallest-population apps — the launch-bound regime where
+    per-request dispatch overhead dominates per-region compute."""
+    return tuple(s.name for s in
+                 sorted(APP_SPECS, key=lambda s: s.n_regions)[:n])
+
+
+def _median_time(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _coalesce_rung(engine, apps, k: int, reps: int, base) -> dict:
+    """Steady-state serial-vs-coalesced timing for one (apps, K) rung,
+    with the bitwise + ledger equivalence check."""
+    specs = _coalesce_specs(apps, k)
+
+    serial = [run_sweep(engine, s) for s in specs]    # warm + compile
+    led_serial = _ledger_totals(engine.memo)
+    serial_s = _median_time(
+        lambda: [run_sweep(engine, s) for s in specs], reps)
+    _memo_restore(engine.memo, base)
+
+    coal = run_coalesced_sweeps(engine, specs)        # warm + compile
+    led_coal = _ledger_totals(engine.memo)
+    run_coalesced_sweeps(engine, specs)   # reach mirror-chained steady
+    coal_s = _median_time(lambda: run_coalesced_sweeps(engine, specs),
+                          reps)
+    _memo_restore(engine.memo, base)
+
+    bitwise = _bitwise_eq(serial, coal) and led_serial == led_coal
+    return {"k": k, "apps": list(apps), "serial_ms": serial_s * 1e3,
+            "coalesced_ms": coal_s * 1e3,
+            "speedup": serial_s / max(coal_s, 1e-12), "bitwise": bitwise}
+
+
+def _bitwise_eq(tables_a, tables_b) -> bool:
+    for ta, tb in zip(tables_a, tables_b):
+        for col in ("estimate", "err_pct", "truth", "n_units"):
+            if not np.array_equal(np.asarray(ta.column(col), float),
+                                  np.asarray(tb.column(col), float)):
+                return False
+    return True
+
+
+def bench_serving(quick: bool = False) -> dict:
+    """CSV rows + claim inputs for the serving subsystem."""
+    engine = get_engine()
+    apps = _small_apps()
+    engine.build(apps)
+    ks = COALESCE_KS_QUICK if quick else COALESCE_KS
+    reps = REPS_QUICK if quick else REPS
+    base = _memo_snapshot(engine.memo)
+
+    # ---------------------------------------- coalesced vs serial at K
+    rows = []
+    bitwise = True
+    for k in ks:
+        r = _coalesce_rung(engine, apps, k, reps, base)
+        bitwise = bitwise and r["bitwise"]
+        rows.append(r)
+        print(f"serving_coalesce_k{k},{r['speedup']:.2f},serial/coalesced "
+              f"(serial {r['serial_ms']:.1f}ms coalesced "
+              f"{r['coalesced_ms']:.1f}ms bitwise={r['bitwise']})")
+    speedup_k8 = next((r["speedup"] for r in rows if r["k"] == 8), None)
+
+    # ------------------------------------------------- service stream
+    n = STREAM_N_QUICK if quick else STREAM_N
+    service = SweepService(engine)
+    stream = synthetic_stream(n, seed=0, apps=apps)
+    for start in range(0, n, TICK):
+        for spec in stream[start:start + TICK]:
+            service.submit(spec)
+        service.tick()
+    stats = service.stats()
+    _memo_restore(engine.memo, base)
+    print(f"serving_latency_p50_ms,{stats.latency_p50_s * 1e3:.1f},"
+          f"{n} mixed requests, ticks of {TICK}")
+    print(f"serving_latency_p95_ms,{stats.latency_p95_s * 1e3:.1f},"
+          f"includes per-tick compile of new shapes")
+    print(f"serving_throughput_rps,{stats.throughput_rps:.1f},"
+          f"completed / busy seconds")
+    print(f"serving_cache_hit_rate,{stats.cache_hit_rate:.3f},"
+          f"bank hits / requested units, lifetime")
+    print(f"serving_coalesced_requests,{stats.coalesced_requests},"
+          f"of {n} served by stacked launches "
+          f"({stats.dispatches} dispatches)")
+
+    # ------------------------------------------- eviction-bounded run
+    memo = engine.memo
+    memo.evict(memo.resident_columns())        # start cold, charges kept
+    cold = _memo_snapshot(memo)
+    capped = SweepService(engine, memo_cap=MEMO_CAP, spill=True)
+    over_cap = 0
+    for start in range(0, n, TICK):
+        for spec in stream[start:start + TICK]:
+            capped.submit(spec)
+        capped.tick()
+        over_cap = max(over_cap,
+                       len(memo.resident_columns()) - MEMO_CAP)
+    cap_stats = capped.stats()
+    capped_totals = _ledger_totals(memo)
+
+    _memo_restore(memo, cold)                  # same stream, no cap
+    free = SweepService(engine)
+    for spec in stream:
+        free.submit(spec)
+    free.drain()
+    exact = _ledger_totals(memo) == capped_totals
+    _memo_restore(engine.memo, base)
+    bounded = over_cap <= 0
+    print(f"serving_eviction_peak_resident,{cap_stats.peak_resident_cols},"
+          f"cap {MEMO_CAP}, {cap_stats.evicted_cols} evictions, "
+          f"bounded={bounded}")
+    print(f"serving_eviction_ledger_exact,{exact},capped+spill totals == "
+          "uncapped (spilled columns restore free)")
+
+    if not quick:
+        # Compute-bound context rung on the default (larger) apps. Runs
+        # LAST: building them grows the memo's app rows, which earlier
+        # snapshots do not cover.
+        big = tuple(all_apps()[:2])
+        engine.build(big)
+        rb = _coalesce_rung(engine, big, 8, reps,
+                            _memo_snapshot(engine.memo))
+        bitwise = bitwise and rb["bitwise"]
+        rows.append(rb)
+        print(f"serving_coalesce_k8_large,{rb['speedup']:.2f},"
+              f"serial/coalesced on {'+'.join(big)} (compute-bound "
+              f"context; bitwise={rb['bitwise']})")
+
+    return {"rows": rows, "bitwise": bitwise, "speedup_k8": speedup_k8,
+            "latency_p50_s": stats.latency_p50_s,
+            "latency_p95_s": stats.latency_p95_s,
+            "throughput_rps": stats.throughput_rps,
+            "cache_hit_rate": stats.cache_hit_rate,
+            "coalesced_requests": stats.coalesced_requests,
+            "dispatches": stats.dispatches,
+            "eviction_bounded": bounded,
+            "eviction_ledger_exact": exact,
+            "peak_resident_cols": cap_stats.peak_resident_cols,
+            "evicted_cols": cap_stats.evicted_cols,
+            "memo_cap": MEMO_CAP, "quick": bool(quick)}
+
+
+def main(argv=None) -> None:
+    """Standalone entry: ``python -m benchmarks.serving_bench [--quick]``."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    r = bench_serving(quick=args.quick)
+    ok = (r["bitwise"] and r["eviction_bounded"]
+          and r["eviction_ledger_exact"])
+    print(f"serving_bench_ok,{ok},bitwise+bounded+exact")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,8 @@ import ast
 import pathlib
 import sys
 
-SCOPE = ("src/repro/core/sampling", "src/repro/experiments")
+SCOPE = ("src/repro/core/sampling", "src/repro/experiments",
+         "src/repro/serving")
 
 # the scheme/policy names the pre-plan engine dispatched on (ISSUE 5);
 # comparisons against them outside plan.py are re-grown string dispatch

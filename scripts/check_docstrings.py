@@ -20,7 +20,8 @@ import ast
 import pathlib
 import sys
 
-DEFAULT_SCOPE = ("src/repro/experiments", "src/repro/kernels")
+DEFAULT_SCOPE = ("src/repro/experiments", "src/repro/kernels",
+                 "src/repro/serving")
 
 
 def _is_public(name: str) -> bool:

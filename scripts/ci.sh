@@ -50,6 +50,17 @@ else
   python -m benchmarks.run --quick --devices 8 --only fused_sweep
 fi
 
+# serving smoke: request-coalescing batched estimation through
+# SweepService under the forced 8-device ("app",) mesh — gates the
+# coalesced==serial bitwise claim row (estimates + ledger totals), the
+# eviction-bounded memo run, and smoke-checks the stacked-dispatch
+# throughput machinery (the >= 2x K=8 gate applies to full runs only)
+if [[ -n "${CI_FORCE_DEVICES:-}" ]]; then
+  python -m benchmarks.run --quick --only serving
+else
+  python -m benchmarks.run --quick --devices 8 --only serving
+fi
+
 # scaled-trials smoke: a chunked 10^4-trial streamed run through the
 # trial engine (keep_trials off -> bounded memory), gating the
 # chunked==unchunked bitwise and coverage-calibration claim rows; under

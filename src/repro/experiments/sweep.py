@@ -34,7 +34,7 @@ from ..simcpu import APP_NAMES
 from .engine import ExperimentEngine, plan_selection_bank
 
 __all__ = ["SRS_SCHEME", "SweepSpec", "SweepRow", "ResultsTable",
-           "run_sweep", "known_schemes"]
+           "assemble_rows", "run_sweep", "known_schemes"]
 
 # the one structurally-special scheme: the phase-1 simple random sample
 # (no stratification, no plan) — everything else is a SamplingPlan
@@ -216,6 +216,37 @@ def _warn_partial_coverage(spec: SweepSpec, valid: np.ndarray,
             UserWarning, stacklevel=3)
 
 
+def assemble_rows(spec: SweepSpec, cfg_is: Sequence[int], ests, errs,
+                  n_units, truth, *, margins=None, p95=None, ci_half=None,
+                  cov=None) -> ResultsTable:
+    """Assemble a sweep's (A, C) result arrays into its ``ResultsTable``.
+
+    The one row-construction path shared by ``run_sweep`` and the
+    request-coalescing batcher (``repro.serving``): rows follow spec
+    order (apps outer, ``cfg_is`` inner), the optional Monte-Carlo
+    columns attach only to rows at ``spec.trials.config_index``, and
+    every value converts to plain Python floats/ints exactly once — so
+    a coalesced request's table is field-for-field identical to the
+    serial ``run_sweep`` table built from the same arrays.
+    """
+    rows: list[SweepRow] = []
+    for a, name in enumerate(spec.apps):
+        for pos, ci in enumerate(cfg_is):
+            at_trial_cfg = (spec.trials is not None
+                            and spec.trials.config_index == ci)
+            rows.append(SweepRow(
+                app=name, scheme=spec.scheme, config_index=ci,
+                estimate=float(ests[a, pos]), truth=float(truth[a, pos]),
+                err_pct=float(errs[a, pos]),
+                n_units=int(n_units[a]),
+                margin_pct=(float(margins[a, pos])
+                            if margins is not None else None),
+                p95_err_pct=float(p95[a]) if at_trial_cfg else None,
+                ci_half_pct=float(ci_half[a]) if at_trial_cfg else None,
+                coverage=float(cov[a]) if at_trial_cfg else None))
+    return ResultsTable(rows)
+
+
 def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
               mesh=None) -> ResultsTable:
     """Execute one sweep: ONE batched (optionally app-sharded) dispatch
@@ -283,19 +314,5 @@ def run_sweep(engine: ExperimentEngine, spec: SweepSpec,
         ci_half = mc.half_width_pct(mc_scheme, mc_truth)
         cov = mc.coverage[mc_scheme]
 
-    rows: list[SweepRow] = []
-    for a, name in enumerate(spec.apps):
-        for pos, ci in enumerate(cfg_is):
-            at_trial_cfg = (spec.trials is not None
-                            and spec.trials.config_index == ci)
-            rows.append(SweepRow(
-                app=name, scheme=spec.scheme, config_index=ci,
-                estimate=float(ests[a, pos]), truth=float(truth[a, pos]),
-                err_pct=float(errs[a, pos]),
-                n_units=int(n_units[a]),
-                margin_pct=(float(margins[a, pos])
-                            if margins is not None else None),
-                p95_err_pct=float(p95[a]) if at_trial_cfg else None,
-                ci_half_pct=float(ci_half[a]) if at_trial_cfg else None,
-                coverage=float(cov[a]) if at_trial_cfg else None))
-    return ResultsTable(rows)
+    return assemble_rows(spec, cfg_is, ests, errs, n_units, truth,
+                         margins=margins, p95=p95, ci_half=ci_half, cov=cov)

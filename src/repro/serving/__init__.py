@@ -1,0 +1,26 @@
+"""Sweep-as-a-service: request coalescing over a persistent MemoBank.
+
+Public surface of the serving subsystem:
+
+* ``SweepService`` — submit/tick/drain request loop with memo-cap
+  eviction (``repro.serving.service``);
+* ``run_coalesced_sweeps`` — one fused dispatch per compiled-program
+  shape group, bitwise-equal to serial (``repro.serving.batcher``);
+* ``coalescible`` / ``coalesce_key`` / ``prepare_sweep`` — the grouping
+  predicate and key (``repro.serving.coalesce``).
+"""
+
+from .batcher import run_coalesced_sweeps
+from .coalesce import PreparedSweep, coalesce_key, coalescible, prepare_sweep
+from .service import ServiceStats, SweepRequest, SweepService
+
+__all__ = [
+    "PreparedSweep",
+    "ServiceStats",
+    "SweepRequest",
+    "SweepService",
+    "coalesce_key",
+    "coalescible",
+    "prepare_sweep",
+    "run_coalesced_sweeps",
+]

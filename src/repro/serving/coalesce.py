@@ -1,0 +1,143 @@
+"""Request preparation + compiled-program-shape grouping for the sweep
+service.
+
+A sweep request (``SweepSpec``) is coalescible when it dispatches
+through the fused megaprogram (stratified plan, ``fused=True``, no
+riding Monte-Carlo study). ``prepare_sweep`` resolves exactly the host
+inputs ``run_fused_sweep`` would build for the request — engine build,
+stacked population view, the plan's ``StratumBank``, the staged-rng
+uniforms — and ``coalesce_key`` reduces them to the hashable
+compiled-program-shape key the batcher groups by: plan identity (the
+traced code), the config tuple (the replicated config matrix), and
+every trailing array shape (jit's specialization). Requests sharing a
+key stack along the app axis with NO re-padding, so each lane's arrays
+are byte-identical to its serial dispatch — the root of the
+coalesced == serial bitwise guarantee.
+
+Stratifier resolution is cached per (engine, stratifier, app tuple):
+``Stratifier.resolve`` builds fresh arrays each call, and a long-lived
+service would otherwise re-stack (and re-upload — the fused driver's
+device cache is keyed on host-object identity) the same bank for every
+repeat request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Optional
+
+import numpy as np
+
+from ..core.sampling import plan as sampling_plan
+from ..experiments.engine import ExperimentEngine, SweepStack
+from ..experiments.sweep import SweepSpec
+
+__all__ = ["PreparedSweep", "coalesce_key", "coalescible", "prepare_sweep"]
+
+# engine -> {(stratifier, apps): StratumBank}; weak on the engine so a
+# dropped engine releases its banks (and their device uploads)
+_RESOLVE_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def coalescible(spec) -> bool:
+    """True when the batcher may stack this request into a fused group.
+
+    Coalescing rides the fused megaprogram, so only stratified
+    ``fused=True`` sweeps without a riding Monte-Carlo study qualify;
+    everything else (phase-1 SRS, staged-reference, ``trials=``) runs
+    serially through ``run_sweep`` inside the same tick.
+    """
+    return (isinstance(spec, SweepSpec) and spec.plan is not None
+            and spec.fused and spec.trials is None)
+
+
+@dataclasses.dataclass
+class PreparedSweep:
+    """One request's resolved dispatch inputs (``prepare_sweep``).
+
+    Everything ``run_fused_sweep`` derives per sweep, held as host
+    arrays so the batcher can either stack them into a group dispatch
+    or fall back to a serial ``run_sweep`` — the two paths consume the
+    same objects.
+    """
+
+    spec: SweepSpec
+    stack: SweepStack
+    bank: sampling_plan.StratumBank
+    cfg_is: tuple
+    cfgs: tuple
+    truth: np.ndarray                       # (A, C) census truth
+    uniforms: Optional[np.ndarray]          # (A, L) staged-rng draws
+
+    @property
+    def num_apps(self) -> int:
+        """App-axis width this request contributes to a stacked group."""
+        return int(self.bank.weights.shape[0])
+
+
+def resolve_bank(engine: ExperimentEngine, stratifier,
+                 apps: tuple) -> sampling_plan.StratumBank:
+    """``stratifier.resolve`` with a per-(engine, stratifier, apps)
+    cache, so repeat requests reuse one ``StratumBank`` (same host
+    object identity -> the fused driver's device-upload cache hits)."""
+    per_engine = _RESOLVE_CACHE.setdefault(engine, {})
+    key = (stratifier, tuple(apps))
+    bank = per_engine.get(key)
+    if bank is None:
+        bank = stratifier.resolve(engine.build(apps))
+        per_engine[key] = bank
+    return bank
+
+
+def prepare_sweep(engine: ExperimentEngine, spec: SweepSpec
+                  ) -> PreparedSweep:
+    """Resolve one coalescible request's dispatch inputs.
+
+    Mirrors ``run_sweep``/``run_fused_sweep`` exactly: engine build +
+    stacked view, config subset and census truth, the plan's
+    ``StratumBank``, and — for ``uses_uniforms`` policies — the staged
+    rng sequence's first draw from ``spec.selection_seed`` (so coalesced
+    picks equal staged picks bit-for-bit).
+    """
+    exps = engine.build(spec.apps)
+    stack = engine.stack(spec.apps)
+    cfg_is = (tuple(range(len(engine.configs)))
+              if spec.config_indices is None else spec.config_indices)
+    cfgs = tuple(engine.configs[i] for i in cfg_is)
+    truth = np.stack([e.truth for e in exps])[:, list(cfg_is)]
+    bank = resolve_bank(engine, spec.plan.stratifier, spec.apps)
+    uniforms = None
+    if spec.plan.policy.uses_uniforms:
+        a_n, n_strata = bank.weights.shape
+        uniforms = np.random.default_rng(spec.selection_seed).random(
+            (a_n, n_strata))
+    return PreparedSweep(spec=spec, stack=stack, bank=bank, cfg_is=cfg_is,
+                         cfgs=cfgs, truth=truth, uniforms=uniforms)
+
+
+def _opt_shape(arr) -> Optional[tuple]:
+    """Trailing shape of an optional array (None stays None — the traced
+    program branches statically on absent inputs)."""
+    return None if arr is None else tuple(np.shape(arr)[1:])
+
+
+def coalesce_key(prep: PreparedSweep) -> tuple:
+    """The hashable compiled-program-shape key requests group by.
+
+    Two requests share a key iff stacking their arrays along the app
+    axis feeds the SAME jitted specialization of the plan's fused
+    megaprogram: same ``SamplingPlan`` (traced code), same config tuple
+    (shared replicated config matrix), same trailing shapes for every
+    bank/stack array, and agreeing presence of the optional inputs
+    (pool/features/centroids/uniforms). Within a group, concatenation
+    adds rows verbatim — no re-padding — which keeps every lane's
+    computation bitwise-equal to its serial dispatch.
+    """
+    bank = prep.bank
+    return (prep.spec.plan, prep.cfgs,
+            _opt_shape(bank.labels), _opt_shape(bank.weights),
+            _opt_shape(bank.baseline), _opt_shape(bank.pool),
+            _opt_shape(bank.feats), _opt_shape(bank.centroids),
+            _opt_shape(prep.stack.feats),
+            prep.uniforms is None)

@@ -61,6 +61,12 @@ class MemoBank:
         # directly — test/bench snapshot-restore helpers — must call
         # ``touch()``.
         self.version = 0
+        # column-granularity reuse bookkeeping for the serving-path
+        # eviction policy: last-use tick per column (LRU order) and the
+        # host-spill store of evicted-with-spill columns
+        self._col_tick: dict[int, int] = {}
+        self._lru_clock = 0
+        self._spill: dict[int, tuple[np.ndarray, np.ndarray]] = {}
 
     # -- shape management ---------------------------------------------------
     @property
@@ -102,14 +108,105 @@ class MemoBank:
         return row
 
     def cols_for(self, cfgs: Sequence[UarchConfig]) -> np.ndarray:
-        """Column indices for configs, growing the config axis as needed."""
+        """Column indices for configs, growing the config axis as needed.
+
+        This is the single column-resolution chokepoint every fill/
+        checkout path routes through, so it doubles as the eviction
+        policy's touch point: each resolved column's last-use tick
+        advances (LRU order for ``evict_to_cap``), and columns that were
+        ``spill``-ed restore transparently from the host spill store —
+        a free operation (values were already paid for), so ledger
+        totals match a never-spilled run.
+        """
         for cfg in cfgs:
             if cfg not in self._cfg_cols:
                 self._cfg_cols[cfg] = len(self.configs)
                 self.configs.append(cfg)
         a0, c0, n0 = self.mask.shape
         self._grow(a0, len(self.configs), n0)
-        return np.asarray([self._cfg_cols[c] for c in cfgs], np.int64)
+        cols = [self._cfg_cols[c] for c in cfgs]
+        self._lru_clock += 1
+        for c in cols:
+            self._col_tick[c] = self._lru_clock
+            if c in self._spill:
+                self._unspill(c)
+        return np.asarray(cols, np.int64)
+
+    # -- eviction / host spill (the serving-path residency policy) -----------
+    def _unspill(self, col: int) -> None:
+        """Restore one spilled column into the live tables (free)."""
+        mask_c, cpi_c = self._spill.pop(col)
+        a, n = mask_c.shape
+        self.mask[:a, col, :n] = mask_c
+        self.cpi[:a, col, :n] = cpi_c
+        self.version += 1
+
+    def resident_columns(self) -> list[int]:
+        """Config columns currently holding memo data in the live tables
+        (spilled/evicted columns are not resident until re-requested)."""
+        return [c for c in range(len(self.configs))
+                if c not in self._spill and bool(self.mask[:, c, :].any())]
+
+    def evict(self, cols: Sequence[int], *, spill: bool = False) -> None:
+        """Drop the given config columns from the live tables.
+
+        ``spill=False`` discards the data: a later request for an
+        evicted config is a miss again and is RE-CHARGED (exactly once —
+        the refill repopulates the mask like any first fill). With
+        ``spill=True`` the column's mask/value data moves to a host
+        spill store instead; ``cols_for`` restores it transparently on
+        the next request, free of charge, so ledger totals equal a
+        never-evicted run. Either way ``version`` bumps, invalidating
+        every device-resident block mirror (the fused sweep's
+        ``_BLOCK_CACHE``) — no stale-block reuse.
+        """
+        cols = [int(c) for c in cols]
+        for c in cols:
+            if c in self._spill:
+                continue                       # already spilled: no-op
+            if spill:
+                self._spill[c] = (self.mask[:, c, :].copy(),
+                                  self.cpi[:, c, :].copy())
+            # charges stay: they are the cumulative cost HISTORY (ledger
+            # totals never roll back); a re-request of a dropped column
+            # adds its refill misses on top, exactly like a first fill
+            self.mask[:, c, :] = False
+            self.cpi[:, c, :] = 0.0
+            self._col_tick.pop(c, None)
+        if cols:
+            self.version += 1
+
+    def spill(self, cols: Sequence[int]) -> None:
+        """``evict`` with host spill: data parks off the live tables and
+        restores free on the next request (see ``evict``)."""
+        self.evict(cols, spill=True)
+
+    def evict_to_cap(self, cap: int, *, policy: str = "lru",
+                     spill: bool = False) -> list[int]:
+        """Evict/spill columns until at most ``cap`` remain resident.
+
+        ``policy="lru"`` drops least-recently-used columns first;
+        ``policy="charge"`` drops the cheapest-to-recompute first
+        (lowest accumulated charge, LRU tie-break) — the charge-weighted
+        option for banks whose columns cost very different region
+        counts. Returns the evicted column indices (empty when already
+        under cap).
+        """
+        if policy not in ("lru", "charge"):
+            raise ValueError(f"unknown eviction policy {policy!r}; "
+                             "choose 'lru' or 'charge'")
+        resident = self.resident_columns()
+        if cap < 0 or len(resident) <= cap:
+            return []
+        if policy == "charge":
+            order = sorted(resident,
+                           key=lambda c: (int(self.charges[:, c].sum()),
+                                          self._col_tick.get(c, 0)))
+        else:
+            order = sorted(resident, key=lambda c: self._col_tick.get(c, 0))
+        victims = order[:len(resident) - cap]
+        self.evict(victims, spill=spill)
+        return victims
 
     # -- the one batched fill path ------------------------------------------
     def fill(self, rows, idx, valid, cfgs: Sequence[UarchConfig], *,
@@ -261,6 +358,57 @@ class MemoBank:
             if ledger is not None and row_miss:
                 ledger.charge(row_miss)
 
+    def absorb_picks(self, rows, cols, picks, valid, values) -> np.ndarray:
+        """Absorb one request's selected-unit results, recomputing its
+        miss flags against the CURRENT host tables.
+
+        The coalescing batcher (``repro.serving``) stacks many requests
+        into one fused dispatch; the program's in-trace miss counts are
+        computed per request against the shared PRE-dispatch block, so
+        two coalesced requests touching the same cold cell would each
+        count it as a miss. This method restores serial accounting:
+        called once per request in submission order, it re-derives the
+        dense dedup-exact request scatter (``fill``'s convention)
+        against the tables as the EARLIER requests left them, then
+        delegates to ``absorb_selected`` — so charges, hit/miss counters
+        and ledger totals land bitwise-identical to the same requests
+        run serially. ``values`` holds the request's (R, C, K) selected
+        CPI (stored on hits, computed on misses — bitwise equal either
+        way for same-program lanes); only newly-missed cells are
+        written. Returns the (R, C) per-request miss counts.
+        """
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        picks = np.asarray(picks, np.int64)
+        valid = np.asarray(valid, bool)
+        r_n, k = picks.shape
+        c_n = cols.size
+        n = self.mask.shape[2]
+        sub = (rows[:, None], cols[None, :])
+        picks_b = np.broadcast_to(picks[:, None, :], (r_n, c_n, k))
+        hit_sel = np.take_along_axis(self.mask[sub], picks_b, axis=2)
+        if bool((hit_sel | ~valid[:, None, :]).all()):
+            # warm fast path: every valid pick is already present. The
+            # dense request scatter only marks picked regions, so zero
+            # selected misses means zero misses anywhere — skip the
+            # (R, C, N) materialization; the accounting below is
+            # bitwise what the dense path would produce.
+            n_miss = np.zeros((r_n, c_n), np.int64)
+            self.absorb_selected(rows, cols, picks,
+                                 np.zeros((r_n, c_n, k), bool), values,
+                                 n_miss, requested=valid.sum(axis=1) * c_n)
+            return n_miss
+        req = np.zeros((r_n, n), bool)
+        rr = np.broadcast_to(np.arange(r_n)[:, None], picks.shape)
+        req[rr[valid], picks[valid]] = True
+        miss = req[:, None, :] & ~self.mask[sub]            # (R, C, N)
+        n_miss = miss.sum(axis=2)
+        miss_sel = np.take_along_axis(miss, picks_b, axis=2) \
+            & valid[:, None, :]
+        self.absorb_selected(rows, cols, picks, miss_sel, values, n_miss,
+                             requested=valid.sum(axis=1) * c_n)
+        return n_miss
+
     # -- snapshot / restore (the checkpointed-fleet contract) ----------------
     def state(self) -> tuple[dict, dict]:
         """``(tree, meta)`` snapshot of the bank's full mutable state.
@@ -272,8 +420,12 @@ class MemoBank:
         are unique via their ``name`` field) a restore validates and
         resolves columns against. Restoring ``state()`` into an
         identically-built bank reproduces every later fill bitwise,
-        including the cost accounting.
+        including the cost accounting. Spilled columns are restored into
+        the live tables first so the snapshot always carries the full
+        memo content (the spill store itself is not serialized).
         """
+        for col in sorted(self._spill):
+            self._unspill(col)
         regions = [0 if l is None else int(l.regions_simulated)
                    for l in self.ledgers]
         instr = [0 if l is None else int(l.instructions_simulated)
@@ -336,6 +488,9 @@ class MemoBank:
         double-counted. ``version`` restores exactly as saved.
         """
         cols = self.prepare_restore(meta, universe=universe)
+        # the snapshot carries the full live tables; stale spill entries
+        # must not "restore" over them later
+        self._spill.clear()
         self.mask[:, cols, :] = np.asarray(tree["mask"], bool)
         self.cpi[:, cols, :] = np.asarray(tree["cpi"], np.float32)
         self.charges[:, cols] = np.asarray(tree["charges"], np.int64)
@@ -364,7 +519,29 @@ class MemoBank:
         hold agree by determinism; charges ADD (each device paid for its
         own misses), so merged ledger totals equal a single-host run's when
         the work was partitioned disjointly.
+
+        Apps the banks share must agree on their region counts — two
+        rows with the same name but different populations are different
+        app universes, and merging them would corrupt both tables.
+        Mismatches raise ``ValueError`` naming the offending apps
+        instead of surfacing as an indexing shape error deep in numpy.
         """
+        mismatched = [
+            (name, self.n_regions[self.names.index(name)], int(n_reg))
+            for name, n_reg in zip(other.names, other.n_regions)
+            if name in self.names
+            and self.n_regions[self.names.index(name)] != int(n_reg)]
+        if mismatched:
+            detail = ", ".join(f"{name!r} ({mine} regions here, {theirs} "
+                               "in the other bank)"
+                               for name, mine, theirs in mismatched)
+            raise ValueError(
+                "cannot merge MemoBanks with mismatched app universes: "
+                + detail)
+        for col in sorted(other._spill):
+            other._unspill(col)
+        for col in sorted(self._spill):
+            self._unspill(col)
         row_map = []
         for name, n_reg in zip(other.names, other.n_regions):
             if name in self.names:

@@ -1,0 +1,350 @@
+"""Serving-layer tests: request coalescing bitwise-equals serial
+dispatch, the persistent MemoBank's eviction/spill accounting, and the
+``SweepService`` queue loop.
+
+The central contract (ISSUE: sweep-as-a-service): a coalesced batch of K
+same-shape sweep requests must be **bitwise** identical to K serial
+``run_sweep`` calls — estimates AND the shared bank's mask/CPI tables,
+charge matrix, hit/miss counters, and per-app ledger totals. Eviction
+semantics: a dropped column is re-charged exactly once on re-request; a
+host-spilled column restores free (ledger equals a never-evicted run);
+every evict/spill/unspill bumps ``MemoBank.version`` so the fused
+driver's device-block mirror cache can never serve stale state.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.sampling import plan as sampling_plan
+from repro.core.sampling.plan import (Centroid, RFVClusters, RandomUnit,
+                                      SamplingPlan)
+from repro.experiments.engine import ExperimentEngine
+from repro.experiments.montecarlo import TrialSpec, run_trials
+from repro.experiments.sweep import SweepSpec, run_sweep
+from repro.serving import (SweepService, coalesce_key, coalescible,
+                           prepare_sweep, run_coalesced_sweeps)
+from repro.simcpu.cache import MemoBank
+from repro.simcpu.simulator import Ledger
+from repro.simcpu.uarch import CONFIGS
+
+APPS = ("505.mcf_r", "520.omnetpp_r")
+CFGS = (0, 1, 2)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    eng = ExperimentEngine()
+    eng.build(APPS)
+    return eng
+
+
+def _memo_state(memo):
+    return (memo.mask.copy(), memo.cpi.copy(), memo.charges.copy(),
+            list(memo.hit_count), list(memo.miss_count),
+            [None if l is None else (l.regions_simulated,
+                                     l.instructions_simulated)
+             for l in memo.ledgers])
+
+
+def _memo_reset(memo, state):
+    # columns may have GROWN since the snapshot: restore through leading
+    # slices (plain `mask[...] = old` would broadcast a 1-column snapshot
+    # across every column)
+    mask, cpi, charges = state[:3]
+    memo.mask[...], memo.cpi[...], memo.charges[...] = False, 0.0, 0
+    memo.mask[tuple(slice(0, d) for d in mask.shape)] = mask
+    memo.cpi[tuple(slice(0, d) for d in cpi.shape)] = cpi
+    memo.charges[tuple(slice(0, d) for d in charges.shape)] = charges
+    memo.hit_count[:], memo.miss_count[:] = state[3], state[4]
+    for ledger, vals in zip(memo.ledgers, state[5]):
+        if ledger is not None:
+            ledger.regions_simulated, ledger.instructions_simulated = vals
+    memo._spill.clear()
+    memo._col_tick.clear()
+    memo.touch()          # direct table writes: drop device-block mirrors
+
+
+def _ledger_totals(memo):
+    return [None if l is None else l.regions_simulated
+            for l in memo.ledgers]
+
+
+def _mixed_specs():
+    """3 same-shape RandomUnit requests (coalesce via stacking) + 2
+    identical Centroid requests (coalesce as duplicates)."""
+    plan_r = SamplingPlan(RFVClusters(), RandomUnit())
+    plan_c = SamplingPlan(RFVClusters(), Centroid())
+    return [
+        SweepSpec(apps=APPS, plan=plan_r, config_indices=CFGS,
+                  selection_seed=s) for s in (1, 2, 3)
+    ] + [
+        SweepSpec(apps=APPS, plan=plan_c, config_indices=CFGS),
+        SweepSpec(apps=APPS, plan=plan_c, config_indices=CFGS),
+    ]
+
+
+# --------------------------------------------------------------------------
+# coalescing == serial, bitwise
+# --------------------------------------------------------------------------
+
+def test_coalesced_matches_serial_bitwise(engine):
+    """K coalesced same-shape sweeps == K serial run_sweep calls:
+    estimates, memo tables, charges, counters, ledgers — all bitwise."""
+    before = _memo_state(engine.memo)
+    serial = [run_sweep(engine, s) for s in _mixed_specs()]
+    state_serial = _memo_state(engine.memo)
+    _memo_reset(engine.memo, before)
+
+    coal = run_coalesced_sweeps(engine, _mixed_specs())
+    state_coal = _memo_state(engine.memo)
+    _memo_reset(engine.memo, before)
+
+    marker = sampling_plan.last_sweep_dispatch()
+    assert marker["coalesced"] == 2          # last group: the Centroid pair
+    assert marker["batch_shape"] == (2 * len(APPS), len(CFGS))
+
+    for st, ct in zip(serial, coal):
+        for col in ("estimate", "err_pct", "truth", "n_units"):
+            np.testing.assert_array_equal(
+                np.asarray(st.column(col), float),
+                np.asarray(ct.column(col), float))
+        assert [r.app for r in st.rows] == [r.app for r in ct.rows]
+
+    for a, b in zip(state_serial[:3], state_coal[:3]):
+        np.testing.assert_array_equal(a, b)   # mask, cpi, charges
+    assert state_serial[3:] == state_coal[3:]  # hit/miss counters, ledgers
+
+
+def test_coalesce_key_and_predicate(engine):
+    plan = SamplingPlan(RFVClusters(), Centroid())
+    a = prepare_sweep(engine, SweepSpec(apps=APPS, plan=plan,
+                                        config_indices=CFGS))
+    b = prepare_sweep(engine, SweepSpec(apps=APPS, plan=plan,
+                                        config_indices=CFGS,
+                                        selection_seed=9))
+    assert coalesce_key(a) == coalesce_key(b)
+    c = prepare_sweep(engine, SweepSpec(apps=APPS, plan=plan,
+                                        config_indices=(0, 1)))
+    assert coalesce_key(a) != coalesce_key(c)   # different config tuple
+
+    assert coalescible(SweepSpec(apps=APPS, plan=plan))
+    assert not coalescible(SweepSpec(apps=APPS))              # SRS
+    assert not coalescible(SweepSpec(apps=APPS, plan=plan, fused=False))
+    assert not coalescible(
+        SweepSpec(apps=APPS, plan=plan, trials=TrialSpec(trials=4)))
+
+
+def test_singleton_groups_fall_back_to_serial(engine):
+    """A lone coalescible request takes the plain run_sweep path (no
+    stacked dispatch) and still matches it bitwise."""
+    spec = SweepSpec(apps=APPS, plan=SamplingPlan(RFVClusters(), Centroid()),
+                     config_indices=CFGS)
+    before = _memo_state(engine.memo)
+    direct = run_sweep(engine, spec)
+    _memo_reset(engine.memo, before)
+    (via_batcher,) = run_coalesced_sweeps(engine, [spec])
+    _memo_reset(engine.memo, before)
+    marker = sampling_plan.last_sweep_dispatch()
+    assert "coalesced" not in marker
+    np.testing.assert_array_equal(direct.column("estimate"),
+                                  via_batcher.column("estimate"))
+
+
+# --------------------------------------------------------------------------
+# eviction / spill accounting
+# --------------------------------------------------------------------------
+
+def test_evicted_column_recharged_exactly_once(engine):
+    """Evict (drop) -> the next request re-charges exactly the original
+    cost, once; a stale fused device-block mirror would charge zero."""
+    memo = engine.memo
+    spec = SweepSpec(apps=APPS, plan=SamplingPlan(RFVClusters(), Centroid()),
+                     config_indices=CFGS)
+    before = _memo_state(engine.memo)
+    t0 = _ledger_totals(memo)
+
+    table = run_sweep(engine, spec)
+    t1 = _ledger_totals(memo)
+    assert sum(a - b for a, b in zip(t1, t0)) > 0
+    run_sweep(engine, spec)                    # warm repeat: pure hits
+    assert _ledger_totals(memo) == t1
+
+    ver = memo.version
+    cols = memo.cols_for([engine.configs[i] for i in CFGS])
+    memo.evict(cols)                           # drop, no spill
+    assert memo.version > ver                  # mirror caches invalidated
+    run_sweep(engine, spec)                    # re-charged exactly once:
+    # the full cold cost (every selected unit at every config), even for
+    # cells the pre-evict run had hit in build-time fills
+    cold = {r.app: r.n_units * len(CFGS) for r in table.rows}
+    np.testing.assert_array_equal(
+        np.subtract(_ledger_totals(memo), t1),
+        [cold[n] for n in memo.names])
+    t2 = _ledger_totals(memo)
+    run_sweep(engine, spec)                    # and warm again
+    assert _ledger_totals(memo) == t2
+    _memo_reset(engine.memo, before)
+
+
+def test_spilled_column_restores_free(engine):
+    """Host-spill -> re-request restores transparently in cols_for with
+    ZERO new charges: ledger totals equal the never-evicted run."""
+    memo = engine.memo
+    spec = SweepSpec(apps=APPS, plan=SamplingPlan(RFVClusters(), Centroid()),
+                     config_indices=CFGS)
+    before = _memo_state(engine.memo)
+
+    run_sweep(engine, spec)
+    t1 = _ledger_totals(memo)
+    mask1, cpi1 = memo.mask.copy(), memo.cpi.copy()
+
+    cols = memo.cols_for([engine.configs[i] for i in CFGS])
+    ver = memo.version
+    memo.spill(cols)
+    assert memo.version > ver
+    resident = memo.resident_columns()
+    assert not set(int(c) for c in cols) & set(resident)
+
+    run_sweep(engine, spec)                    # unspill + serve, free
+    assert _ledger_totals(memo) == t1          # == never-evicted
+    np.testing.assert_array_equal(memo.mask, mask1)
+    np.testing.assert_array_equal(memo.cpi, cpi1)
+    _memo_reset(engine.memo, before)
+
+
+def test_evict_to_cap_policies():
+    """LRU evicts the stalest columns; charge policy the cheapest-to-
+    recompute; both leave exactly ``cap`` resident."""
+    def _fill(bank, cfg, k):
+        bank.fill([0], np.arange(k)[None], None, [cfg],
+                  values=np.ones((1, 1, k), np.float32))
+
+    memo = MemoBank()
+    memo.add_app("a", 8, Ledger())
+    for i, cfg in enumerate(CONFIGS[:4]):       # touch order: 0,1,2,3
+        _fill(memo, cfg, 2 + 2 * i)
+    memo.cols_for([CONFIGS[1]])                 # re-touch col 1
+    victims = memo.evict_to_cap(2, policy="lru")
+    assert sorted(int(v) for v in victims) == [0, 2]   # stalest two
+    assert sorted(memo.resident_columns()) == [1, 3]
+
+    memo2 = MemoBank()
+    memo2.add_app("a", 8, Ledger())
+    for i, cfg in enumerate(CONFIGS[:3]):       # charges: 2, 4, 6 regions
+        _fill(memo2, cfg, 2 + 2 * i)
+    victims = memo2.evict_to_cap(1, policy="charge")
+    assert sorted(int(v) for v in victims) == [0, 1]   # cheapest first
+    assert memo2.resident_columns() == [2]
+
+    with pytest.raises(ValueError, match="policy"):
+        memo2.evict_to_cap(1, policy="fifo")
+
+
+def test_absorb_picks_dedups_requests():
+    """Dense-request scatter: duplicate picks across configs charge each
+    distinct (config, region) cell once; a repeat call charges zero."""
+    memo = MemoBank()
+    memo.add_app("a", 8, Ledger())
+    cols = memo.cols_for(CONFIGS[:2])
+    picks = np.array([[1, 2, 2]])
+    valid = np.ones((1, 3), bool)
+    values = np.full((1, 2, 3), 1.5)
+    n_miss = memo.absorb_picks([0], cols, picks, valid, values)
+    assert int(n_miss.sum()) == 4              # 2 distinct x 2 configs
+    assert memo.ledgers[0].regions_simulated == 4
+    n_miss = memo.absorb_picks([0], cols, picks, valid, values)
+    assert int(n_miss.sum()) == 0              # warm: all hits
+
+
+def test_merge_rejects_mismatched_universes():
+    a, b = MemoBank(), MemoBank()
+    a.add_app("505.mcf_r", 8, None)
+    b.add_app("505.mcf_r", 12, None)
+    with pytest.raises(ValueError, match=r"mismatched app universes.*"
+                                         r"505\.mcf_r"):
+        a.merge(b)
+
+
+# --------------------------------------------------------------------------
+# SweepService loop
+# --------------------------------------------------------------------------
+
+def test_service_serves_and_coalesces(engine):
+    before = _memo_state(engine.memo)
+    service = SweepService(engine)
+    ids = [service.submit(s) for s in _mixed_specs()]
+    assert service.pending == len(ids)
+    served = service.drain()
+    assert served == len(ids)
+
+    direct = run_coalesced_sweeps(engine, _mixed_specs())
+    _memo_reset(engine.memo, before)
+    for rid, table in zip(ids, direct):
+        np.testing.assert_array_equal(service.result(rid).column("estimate"),
+                                      table.column("estimate"))
+    stats = service.stats()
+    assert stats.completed == len(ids)
+    assert stats.coalesced_requests == 5       # both groups stacked
+    assert stats.dispatches == 2
+    assert stats.latency_p95_s >= stats.latency_p50_s > 0
+    _memo_reset(engine.memo, before)
+
+
+def test_service_trial_dedup_matches_serial(engine):
+    """Two identical TrialSpec requests: one execution + a charged-fill
+    replay leaves counters identical to two serial run_trials calls."""
+    spec = TrialSpec(trials=16, schemes=("random", "rfv"), config_index=0,
+                     seed=3)
+    before = _memo_state(engine.memo)
+    run_trials(engine, spec, apps=APPS)
+    run_trials(engine, spec, apps=APPS)
+    state_serial = _memo_state(engine.memo)
+    _memo_reset(engine.memo, before)
+
+    service = SweepService(engine)
+    r1 = service.submit(spec, apps=APPS)
+    r2 = service.submit(spec, apps=APPS)
+    service.tick()
+    state_service = _memo_state(engine.memo)
+    _memo_reset(engine.memo, before)
+
+    assert service.result(r1) is service.result(r2)   # deduped execution
+    for a, b in zip(state_serial[:3], state_service[:3]):
+        np.testing.assert_array_equal(a, b)
+    assert state_serial[3:] == state_service[3:]
+
+    with pytest.raises(ValueError, match="apps"):
+        service.submit(spec)                   # TrialSpec needs apps=
+
+
+def test_service_memo_cap_bounds_residency(engine):
+    """memo_cap holds resident columns at/below the cap after every
+    tick; spilled columns restore free when re-requested."""
+    memo = engine.memo
+    before = _memo_state(engine.memo)
+    memo.evict([c for c in memo.resident_columns()])   # start cold
+    cold = _memo_state(engine.memo)
+
+    plan = SamplingPlan(RFVClusters(), Centroid())
+    service = SweepService(engine, memo_cap=2, spill=True)
+    for cfg_is in ((0, 1, 2), (3, 4, 5), (0, 1, 2)):
+        service.submit(SweepSpec(apps=APPS, plan=plan,
+                                 config_indices=cfg_is))
+        service.tick()
+        assert len(memo.resident_columns()) <= 2
+
+    stats = service.stats()
+    assert stats.evicted_cols > 0
+    assert stats.peak_resident_cols <= 3       # one tick's working set
+    capped_totals = _ledger_totals(memo)
+
+    # every charge was paid once: spill means re-requests restored free,
+    # so totals equal the cap-less schedule's
+    _memo_reset(engine.memo, cold)
+    uncapped = SweepService(engine)
+    for cfg_is in ((0, 1, 2), (3, 4, 5), (0, 1, 2)):
+        uncapped.submit(SweepSpec(apps=APPS, plan=plan,
+                                  config_indices=cfg_is))
+    uncapped.drain()
+    assert _ledger_totals(memo) == capped_totals
+    _memo_reset(engine.memo, before)
