@@ -44,7 +44,9 @@ def bench_kmeans_batched() -> dict:
     from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
 
     batched = jax.jit(kmeans_assign)
-    vmapped = jax.jit(jax.vmap(kmeans_assign))
+    # the vmap-of-kernel leg IS the measured anti-pattern (JL006's
+    # regression baseline), not production dispatch
+    vmapped = jax.jit(jax.vmap(kmeans_assign))  # jaxlint: disable=JL006
     oracle = jax.jit(kmeans_assign_ref)
 
     rng = np.random.default_rng(0)

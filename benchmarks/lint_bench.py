@@ -1,0 +1,51 @@
+"""Bench the static gate itself: one full jaxlint sweep of the repo.
+
+Feeds the ``lint_clean`` claim row: the committed tree must pass its
+own static gate (0 active findings, no stale baseline entries, every
+baseline entry justified) and the full sweep must stay far inside the
+CI fail-fast budget (< 10 s, stdlib ``ast`` only — the jax import
+never happens on this path).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+__all__ = ["bench_lint"]
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def bench_lint() -> dict:
+    """One repo-wide jaxlint sweep: CSV rows + the claim-row summary."""
+    src = str(_ROOT / "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    from repro.analysis import run_lint
+    from repro.analysis.registry import RULES
+
+    report = run_lint(root=_ROOT)
+    baseline = json.loads((_ROOT / "lint_baseline.json").read_text())
+    out = {
+        "files": report.files,
+        "rules": len(RULES),
+        "active": len(report.active),
+        "baselined": len(report.baselined),
+        "suppressed": report.suppressed,
+        "stale": len(report.stale),
+        "errors": len(report.errors),
+        "baseline_entries": len(baseline["entries"]),
+        "seconds": round(report.duration_s, 3),
+        "ok": report.ok,
+    }
+    print(f"lint_files,{report.files},python files swept")
+    print(f"lint_rules,{out['rules']},registered rules")
+    print(f"lint_active,{out['active']},findings failing the gate")
+    print(f"lint_baselined,{out['baselined']},grandfathered+justified")
+    print(f"lint_suppressed,{out['suppressed']},inline jaxlint comments")
+    print(f"lint_seconds,{out['seconds']},full-sweep wall time")
+    for f in report.active:
+        print(f"lint_finding,0,{f.render()}")
+    return out

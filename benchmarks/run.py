@@ -142,7 +142,7 @@ def main() -> None:
         _force_devices(args.devices)
 
     from . import (estimators_bench, kernels_bench, kmeans_batched_bench,
-                   paper_figs, serving_bench, trials_bench)
+                   lint_bench, paper_figs, serving_bench, trials_bench)
 
     max_trials = args.trials if args.trials is not None \
         else (10_000 if args.quick else 100_000)
@@ -173,6 +173,7 @@ def main() -> None:
             lambda: trials_bench.bench_checkpoint_overhead(
                 quick=args.quick)),
         "serving": (lambda: serving_bench.bench_serving(quick=args.quick)),
+        "lint": lint_bench.bench_lint,
     }
     if args.only:
         names = args.only.split(",")
@@ -321,6 +322,16 @@ def main() -> None:
               f"{100 * rco['ratio']:.2f}% of the steady-state "
               f"{rco['trials']}-trial run ({rco['run_seconds']}s, "
               f"{rco['snapshot_mb']}MB state, gate < 5%)")
+
+    rl = results.get("lint")
+    if rl:
+        check("lint_clean", rl["ok"] and rl["seconds"] < 10.0,
+              f"{rl['rules']} rules x {rl['files']} files: "
+              f"{rl['active']} active, {rl['baselined']} baselined "
+              f"({rl['baseline_entries']} justified entries), "
+              f"{rl['suppressed']} suppressed, {rl['stale']} stale, "
+              f"{rl['errors']} errors in {rl['seconds']:.2f}s "
+              "(gate: clean and < 10s)")
 
     rs = results.get("serving")
     if rs:

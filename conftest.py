@@ -1,0 +1,17 @@
+"""Repo-root pytest config.
+
+Puts ``src/`` and ``tests/`` on ``sys.path`` (so ``python -m pytest``
+works without PYTHONPATH gymnastics) and loads the recompile-guard
+plugin — ``pytest_plugins`` may only be declared in the rootdir
+conftest, and the pytest.ini at the repo root pins rootdir here.
+"""
+
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent
+for _p in (_ROOT / "src", _ROOT / "tests"):
+    if str(_p) not in sys.path:
+        sys.path.insert(0, str(_p))
+
+pytest_plugins = ["plugins.recompile_guard"]

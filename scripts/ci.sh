@@ -20,13 +20,12 @@ fi
 # degrades gracefully without them
 pip install -q -r requirements-dev.txt 2>/dev/null || true
 
-# docs + API gates: docstring presence on the experiments/kernels
-# surface, README/docs link integrity, and the sampling-plan API
-# contract (__all__ everywhere public + no scheme/policy string-literal
-# dispatch outside the plan registry) — all offline; see docs/
-python scripts/check_docstrings.py
-python scripts/check_docs_links.py
-python scripts/check_api.py
+# static-analysis gate: jaxlint (repro.analysis) — trace hygiene,
+# PRNG discipline, donation safety, precision-policy conformance
+# (JL001-JL006) plus the folded-in api/docstring/doc-link gates
+# (JL100-JL102). Dependency-free, offline, seconds; baseline policy in
+# docs/contributing.md#static-analysis
+python scripts/lint.py
 
 # estimator parity suite first (fast, no engine builds): batched
 # StratumTables estimators must match the scalar reference before the
@@ -37,7 +36,7 @@ python -m pytest -x -q
 # bench smoke; the `estimators` leg gates the batched-vs-scalar claim row
 # and `fused_sweep` the megaprogram crossover/parity/ledger gate (it
 # reuses the engine fig5 built, so the ladder costs seconds, not a build)
-python -m benchmarks.run --quick --only fig5_config_sweep,kernels,kmeans_batched,estimators,fused_sweep
+python -m benchmarks.run --quick --only fig5_config_sweep,kernels,kmeans_batched,estimators,fused_sweep,lint
 
 # sharded fused-megaprogram smoke at reduced scale: the donated-buffer
 # program shard_maps over an ("app",) mesh of 8 forced host devices and

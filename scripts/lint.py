@@ -1,0 +1,24 @@
+#!/usr/bin/env python
+"""The single static gate: run jaxlint (``repro.analysis``) on the repo.
+
+Replaces the three pre-jaxlint gate scripts (``check_api.py``,
+``check_docstrings.py``, ``check_docs_links.py``) — their checks now
+run as rules JL100–JL102 alongside the jax-discipline pack JL001–JL006.
+Dependency-free (stdlib ``ast`` only, never imports jax), so the CI
+static-analysis job needs no environment beyond Python.
+
+Usage mirrors the module CLI: ``python scripts/lint.py [--json]
+[--select JL003] [paths...]``; see ``--list-rules`` for the rule table
+and ``docs/contributing.md`` for suppression/baseline policy.
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro.analysis import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""jaxlint: repo-native static analysis for the two-phase sampling stack.
+
+Nine PRs of growth accreted load-bearing conventions that no unit test
+reliably enforces: ONE-dispatch-per-site markers, ``PrecisionPolicy``
+threading, donated-buffer discipline, ``fold_in`` PRNG derivation, the
+batch-native-kernel (never ``vmap``-of-``pallas_call``) contract, and
+the sampling-plan registry as the only dispatch surface. This package
+mechanizes them as an AST-based lint pass — stdlib ``ast``/``tokenize``
+only, no third-party dependencies, never imports jax — so the gate runs
+in the dependency-free CI job and in a few seconds locally.
+
+Rule packs
+----------
+* ``rules_trace``     — JL001 host-sync-in-trace, JL005
+  untraced-python-branch, JL006 vmap-of-pallas_call (shared
+  traced-reachability analysis).
+* ``rules_prng``      — JL002 prng-key-reuse.
+* ``rules_precision`` — JL003 raw-dtype-literal, JL004
+  donation-after-use.
+* ``rules_repo``      — JL100 api-surface (``__all__`` + string/
+  ``isinstance`` dispatch), JL101 missing-docstring, JL102
+  broken-doc-link: the three pre-jaxlint gate scripts folded into the
+  same driver.
+
+Entry points: ``python -m repro.analysis`` or ``scripts/lint.py``.
+Suppression (``# jaxlint: disable=JL003``) and the grandfathering
+baseline (``lint_baseline.json``) are documented in
+``docs/contributing.md``.
+"""
+
+from .driver import main, run_lint
+from .findings import Finding
+from .registry import RULES, register_rule
+
+# importing the packs registers their rules with the driver registry
+from . import rules_trace, rules_prng, rules_precision, rules_repo  # noqa: E402,F401 isort:skip
+
+__all__ = ["main", "run_lint", "Finding", "RULES", "register_rule"]

@@ -1,0 +1,10 @@
+"""``python -m repro.analysis`` — run the jaxlint static-analysis gate."""
+
+import sys
+
+from . import main
+
+__all__: list = []
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,201 @@
+"""Precision-policy and donation-safety rules: JL003, JL004.
+
+JL003 enforces the PR 6 contract that ONE ``PrecisionPolicy`` (trace /
+accum / host dtype triple, ``repro.core.precision``) owns every dtype
+decision in the estimator pipeline. A raw ``jnp.float32`` or
+``astype("float32")`` in that scope is exactly the class of silent
+downcast that produced PR 7's ``Centroid`` f32 catastrophic-
+cancellation bug. Scope: the sampling/experiment/serving/simcpu
+packages. ``np.float64`` attribute references are exempt by
+definition — numpy never runs inside a trace and f64 IS the policy's
+``host`` role; every other float dtype literal must route through the
+policy (or carry a justification).
+
+JL004 guards the fused megaprogram's donation contract (PR 7): a
+buffer passed at a ``donate_argnums`` position is DELETED by the
+dispatch — reading the same name afterwards raises (CPU) or returns
+garbage (some backends). The rule tracks names bound to
+``jax.jit(..., donate_argnums=...)`` programs and flags any read of a
+donated argument after the dispatch call in the same scope.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .context import FileContext
+from .findings import Finding
+from .registry import register_rule
+
+__all__ = ["check_dtype_literal", "check_donation_after_use"]
+
+_PRECISION_SCOPE = (
+    "src/repro/core/sampling",
+    "src/repro/experiments",
+    "src/repro/serving",
+    "src/repro/simcpu",
+    "src/repro/distributed",
+)
+
+# dotted dtype attributes that bypass PrecisionPolicy in scope; numpy
+# float64 is exempt (it IS the host role — numpy code never traces)
+_BANNED_DTYPE_ATTRS = frozenset({
+    "jax.numpy.float32", "jax.numpy.float64", "jax.numpy.float16",
+    "jax.numpy.bfloat16", "numpy.float32", "numpy.float16",
+})
+_DTYPE_STRINGS = frozenset({"float32", "float64", "float16", "bfloat16"})
+
+
+@register_rule(
+    "JL003", "raw-dtype-literal",
+    "float dtype literals in the estimator pipeline bypass "
+    "PrecisionPolicy (core/precision.py) — the silent-downcast class "
+    "of bug behind PR 7's Centroid cancellation",
+    scope=_PRECISION_SCOPE)
+def check_dtype_literal(ctx: FileContext):
+    """Flag raw float dtype literals outside ``PrecisionPolicy``."""
+    hits = []
+    flagged: set[int] = set()
+
+    def flag(node, msg):
+        if id(node) not in flagged:
+            flagged.add(id(node))
+            hits.append((node, msg))
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute):
+            dotted = ctx.resolve(node)
+            if dotted in _BANNED_DTYPE_ATTRS:
+                flag(node, f"raw dtype literal `{dotted}` — thread a "
+                     "PrecisionPolicy and use policy.trace_dtype/"
+                     "accum_dtype/host_dtype instead")
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Attribute) and fn.attr == "astype":
+                for arg in node.args:
+                    if isinstance(arg, ast.Constant) \
+                            and arg.value in _DTYPE_STRINGS:
+                        flag(arg, f"raw dtype string `astype("
+                             f"\"{arg.value}\")` — use the "
+                             "PrecisionPolicy dtype for this role")
+            if ctx.resolve(fn) in ("numpy.dtype", "jax.numpy.dtype"):
+                for arg in node.args:
+                    if isinstance(arg, ast.Constant) \
+                            and arg.value in _DTYPE_STRINGS:
+                        flag(arg, f"raw dtype string `dtype("
+                             f"\"{arg.value}\")` — use the "
+                             "PrecisionPolicy dtype for this role")
+            for kw in node.keywords:
+                if kw.arg == "dtype" and isinstance(kw.value, ast.Constant) \
+                        and kw.value.value in _DTYPE_STRINGS:
+                    flag(kw.value, f"raw dtype string `dtype="
+                         f"\"{kw.value.value}\"` — use the "
+                         "PrecisionPolicy dtype for this role")
+    return [Finding(rule="JL003", path=ctx.rel, line=n.lineno,
+                    col=n.col_offset, message=m) for n, m in hits]
+
+
+def _donate_positions(call: ast.Call, module_consts: dict) -> tuple:
+    """Donated positional indices from a jax.jit call's keywords."""
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        value = kw.value
+        if isinstance(value, ast.Name):
+            value = module_consts.get(value.id)
+        if isinstance(value, ast.Constant) and isinstance(value.value, int):
+            return (value.value,)
+        if isinstance(value, (ast.Tuple, ast.List)):
+            out = []
+            for elt in value.elts:
+                if isinstance(elt, ast.Constant) \
+                        and isinstance(elt.value, int):
+                    out.append(elt.value)
+            return tuple(out)
+    return ()
+
+
+@register_rule(
+    "JL004", "donation-after-use",
+    "an argument passed at a donate_argnums position is deleted by the "
+    "dispatch; reading it afterwards raises or returns garbage")
+def check_donation_after_use(ctx: FileContext):
+    """Flag reads of donated buffers after the donating dispatch."""
+    module_consts = {
+        t.id: node.value
+        for node in ctx.tree.body if isinstance(node, ast.Assign)
+        for t in node.targets if isinstance(t, ast.Name)}
+
+    # names bound (module- or function-level) to donating jitted programs
+    donating: dict[str, tuple] = {}
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        value = node.value
+        if isinstance(value, ast.Call) \
+                and ctx.resolve(value.func) in ("jax.jit", "jax.pjit"):
+            pos = _donate_positions(value, module_consts)
+            if pos:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        donating[t.id] = pos
+
+    findings: list[Finding] = []
+
+    def scan_body(stmts):
+        donated: dict[str, ast.AST] = {}   # name -> dispatch call site
+
+        def dispatch_args(call: ast.Call, positions):
+            for i in positions:
+                if i < len(call.args) and isinstance(call.args[i], ast.Name):
+                    donated[call.args[i].id] = call
+
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            # reads of already-donated names anywhere in this statement
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Name) and isinstance(sub.ctx,
+                                                            ast.Load) \
+                        and sub.id in donated:
+                    site = donated[sub.id]
+                    findings.append(Finding(
+                        rule="JL004", path=ctx.rel, line=sub.lineno,
+                        col=sub.col_offset,
+                        message=f"`{sub.id}` was donated to the dispatch at "
+                        f"line {site.lineno} (donate_argnums) and no longer "
+                        "owns its buffer; reload or re-checkout the value"))
+                    donated.pop(sub.id, None)   # one report per donation
+            # new dispatches in this statement
+            for sub in ast.walk(stmt):
+                if not isinstance(sub, ast.Call):
+                    continue
+                if isinstance(sub.func, ast.Name) \
+                        and sub.func.id in donating:
+                    dispatch_args(sub, donating[sub.func.id])
+                elif isinstance(sub.func, ast.Call) \
+                        and ctx.resolve(sub.func.func) in ("jax.jit",
+                                                           "jax.pjit"):
+                    pos = _donate_positions(sub.func, module_consts)
+                    if pos:
+                        dispatch_args(sub, pos)
+            # reassignment restores ownership
+            targets = []
+            if isinstance(stmt, ast.Assign):
+                targets = stmt.targets
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                targets = [stmt.target]
+            elif isinstance(stmt, ast.Delete):
+                targets = stmt.targets
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        donated.pop(n.id, None)
+
+    for info in ctx.functions:
+        if isinstance(info.node, ast.Lambda):
+            continue
+        scan_body(info.node.body)
+    scan_body(ctx.tree.body)
+    return findings

@@ -1,0 +1,197 @@
+"""PRNG-discipline rule: JL002 prng-key-reuse.
+
+The streaming trial engine's reproducibility contract (PR 6) hangs on
+every key being consumed exactly once: block ``b`` of app ``a`` draws
+from ``fold_in(fold_in(trial_key, b), a)``, a pure function of the
+(seed, block, app) coordinates. A key fed to two ``jax.random`` draws
+produces *correlated* samples — the two-phase estimator's variance
+math silently assumes independence, so reuse biases the confidence
+intervals no unit test will catch.
+
+The check is an order-aware walk of each function body: a name
+consumed by a draw (``uniform``/``normal``/...) is poisoned until
+reassigned (typically via ``split``/``fold_in``, which only *derive*
+and never consume). ``if``/``else`` branches are alternatives — the
+same key drawn in both arms is fine — so each arm starts from a
+snapshot and the merged state is the conservative union. Loop bodies
+are processed twice: a draw from a loop-invariant key is reuse on the
+second iteration even though a single linear pass never sees it twice.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .context import FileContext
+from .findings import Finding
+from .registry import register_rule
+
+__all__ = ["check_key_reuse"]
+
+# jax.random functions that CONSUME their key argument
+_DRAWS = frozenset({
+    "uniform", "normal", "bernoulli", "randint", "choice", "permutation",
+    "shuffle", "gamma", "beta", "poisson", "exponential", "categorical",
+    "gumbel", "laplace", "dirichlet", "truncated_normal", "bits", "t",
+    "cauchy", "logistic", "rademacher", "maxwell", "orthogonal", "ball",
+    "multivariate_normal", "loggamma", "binomial", "geometric", "rayleigh",
+    "triangular", "weibull_min", "chisquare", "f", "generalized_normal",
+})
+# jax.random functions that DERIVE new keys without consuming
+_DERIVES = frozenset({"split", "fold_in", "clone", "key_data", "wrap_key_data"})
+
+
+def _key_expr(node) -> str:
+    """Stable textual id for a key argument (Name or dotted chain)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class _KeyState:
+    """Names consumed so far, mapping to the draw that consumed them."""
+
+    def __init__(self, ctx: FileContext):
+        self.ctx = ctx
+        self.consumed: dict[str, ast.AST] = {}
+        self.findings: list[Finding] = []
+        self._reported: set[int] = set()
+
+    def copy(self) -> "_KeyState":
+        dup = _KeyState(self.ctx)
+        dup.consumed = dict(self.consumed)
+        dup.findings = self.findings          # shared sink
+        dup._reported = self._reported        # shared dedupe
+        return dup
+
+    def merge(self, *branches: "_KeyState") -> None:
+        for b in branches:
+            self.consumed.update(b.consumed)
+
+    def reset(self, names) -> None:
+        for n in names:
+            self.consumed.pop(n, None)
+
+    def draw(self, call: ast.Call, fn_name: str) -> None:
+        if not call.args:
+            return
+        key = _key_expr(call.args[0])
+        if not key:
+            return
+        prior = self.consumed.get(key)
+        if prior is not None and id(call) not in self._reported:
+            self._reported.add(id(call))
+            self.findings.append(Finding(
+                rule="JL002", path=self.ctx.rel, line=call.lineno,
+                col=call.col_offset,
+                message=f"PRNG key `{key}` already consumed by a "
+                f"`random.*` draw at line {prior.lineno}; draws from the "
+                f"same key are correlated — `split`/`fold_in` before "
+                f"`{fn_name}`"))
+        self.consumed[key] = call
+
+
+def _scan_expr(node, state: _KeyState) -> None:
+    """Visit draw calls inside one expression, in walk order."""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        dotted = state.ctx.resolve(sub.func)
+        if not dotted:
+            continue
+        head, _, last = dotted.rpartition(".")
+        if last in _DRAWS and head.endswith("random"):
+            state.draw(sub, last)
+
+
+def _scan_stmts(stmts, state: _KeyState) -> None:
+    for stmt in stmts:
+        _scan_one(stmt, state)
+
+
+def _scan_one(stmt, state: _KeyState) -> None:
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+                         ast.ClassDef)):
+        return                      # nested scopes are scanned separately
+    if isinstance(stmt, ast.If):
+        _scan_expr(stmt.test, state)
+        then_state, else_state = state.copy(), state.copy()
+        _scan_stmts(stmt.body, then_state)
+        _scan_stmts(stmt.orelse, else_state)
+        state.merge(then_state, else_state)
+        return
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        _scan_expr(stmt.iter, state)
+        loop_targets = {n.id for n in ast.walk(stmt.target)
+                        if isinstance(n, ast.Name)}
+        for _pass in range(2):      # 2nd pass: loop-invariant key reuse
+            state.reset(loop_targets)
+            _scan_stmts(stmt.body, state)
+        _scan_stmts(stmt.orelse, state)
+        return
+    if isinstance(stmt, ast.While):
+        _scan_expr(stmt.test, state)
+        for _pass in range(2):
+            _scan_stmts(stmt.body, state)
+        _scan_stmts(stmt.orelse, state)
+        return
+    if isinstance(stmt, ast.Try):
+        _scan_stmts(stmt.body, state)
+        for handler in stmt.handlers:
+            _scan_stmts(handler.body, state)
+        _scan_stmts(stmt.orelse, state)
+        _scan_stmts(stmt.finalbody, state)
+        return
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        for item in stmt.items:
+            _scan_expr(item.context_expr, state)
+        _scan_stmts(stmt.body, state)
+        return
+    # plain statement: draws first (value side), then reassignment resets
+    _scan_expr(stmt, state)
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.Delete):
+        targets = stmt.targets
+    reset = set()
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                reset.add(n.id)
+            elif isinstance(n, ast.Attribute):
+                dotted = _key_expr(n)
+                if dotted:
+                    reset.add(dotted)
+    # walrus assignments anywhere in the statement also rebind
+    for n in ast.walk(stmt):
+        if isinstance(n, ast.NamedExpr) and isinstance(n.target, ast.Name):
+            reset.add(n.target.id)
+    state.reset(reset)
+
+
+@register_rule(
+    "JL002", "prng-key-reuse",
+    "a key consumed by two random.* draws without an intervening "
+    "split/fold_in yields correlated samples and biases the two-phase "
+    "CI math")
+def check_key_reuse(ctx: FileContext):
+    """Flag PRNG keys consumed by more than one ``jax.random`` draw."""
+    findings: list[Finding] = []
+    # module body counts as a scope too (bench/example scripts)
+    scopes = [ctx.tree.body] + [
+        info.node.body if isinstance(info.node.body, list)
+        else [ast.Expr(value=info.node.body)]
+        for info in ctx.functions]
+    for body in scopes:
+        state = _KeyState(ctx)
+        state.findings = findings
+        _scan_stmts(body, state)
+    return findings

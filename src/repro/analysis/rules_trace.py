@@ -1,0 +1,233 @@
+"""Trace-hygiene rules: JL001, JL005, JL006.
+
+These enforce the conventions the fused megaprogram (PR 7) and the
+streaming trial engine (PR 6) rely on: traced bodies never round-trip
+to the host, never branch in Python on traced values, and kernels are
+batch-native — ``vmap``-of-``pallas_call`` is the exact regression the
+batched ``(batch, tile)`` grid eliminated in PR 3.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .context import FileContext
+from .findings import Finding
+from .registry import register_rule
+
+__all__ = ["check_host_sync", "check_untraced_branch",
+           "check_vmap_of_pallas"]
+
+# numpy functions that force device->host materialization of their
+# argument when it is traced (silent sync, or a tracer leak error)
+_NP_SYNC_FNS = frozenset({"asarray", "array", "frombuffer",
+                          "ascontiguousarray", "copyto", "save", "savez"})
+# attribute calls that block on / materialize a device value
+_SYNC_ATTRS = frozenset({"item", "tolist", "block_until_ready"})
+# attributes of a traced array that are static at trace time — reading
+# them neither syncs (JL001) nor makes a Python branch dynamic (JL005)
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "sharding",
+                           "aval", "weak_type"})
+# builtins whose result on a non-constant argument is static/hashable
+_STATIC_CALLS = frozenset({"len", "isinstance", "issubclass", "getattr",
+                           "hasattr", "type", "id", "repr", "str"})
+# parameter names conventionally bound to static (hashable, non-array)
+# configuration in this codebase — branching on them is trace-time
+# specialization, not a traced-value branch. Arrays must not use these
+# names (rename or suppress if they do).
+_STATIC_NAME_HINTS = frozenset({"cfg", "config", "spec", "plan", "policy",
+                                "precision", "mesh", "backend", "axes",
+                                "hparams", "strict"})
+
+
+def _findings(ctx, rule, nodes_msgs):
+    return [Finding(rule=rule, path=ctx.rel, line=n.lineno,
+                    col=n.col_offset, message=m) for n, m in nodes_msgs]
+
+
+@register_rule(
+    "JL001", "host-sync-in-trace",
+    "host round-trips (.item()/float()/np.asarray/device_get/print) "
+    "inside functions reachable from a jit/shard_map/pallas_call site "
+    "corrupt or abort the trace")
+def check_host_sync(ctx: FileContext):
+    """Flag host-materializing calls inside traced-reachable functions."""
+    hits = []
+    for info in ctx.traced_functions:
+        for node in FileContext._own_body_walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if (isinstance(fn, ast.Attribute) and fn.attr in _SYNC_ATTRS
+                    and not node.args):
+                hits.append((node, f"`.{fn.attr}()` inside traced function "
+                             f"`{info.qualname}` forces a device->host "
+                             "sync; keep the value on device or hoist to "
+                             "the host caller"))
+                continue
+            dotted = ctx.resolve(fn)
+            if dotted == "jax.device_get":
+                hits.append((node, "`jax.device_get` inside traced function "
+                             f"`{info.qualname}`; traced values cannot be "
+                             "fetched mid-program"))
+            elif (dotted.startswith("numpy.")
+                    and dotted.rsplit(".", 1)[-1] in _NP_SYNC_FNS):
+                hits.append((node, f"`{dotted}` inside traced function "
+                             f"`{info.qualname}` materializes its argument "
+                             "on host; use jnp under the PrecisionPolicy "
+                             "trace dtype instead"))
+            elif isinstance(fn, ast.Name) and fn.id == "print":
+                hits.append((node, "`print` inside traced function "
+                             f"`{info.qualname}` runs at trace time only "
+                             "(or syncs); use jax.debug.print"))
+            elif (isinstance(fn, ast.Name) and fn.id in ("float", "int",
+                                                         "bool")
+                    and len(node.args) == 1
+                    and not isinstance(node.args[0], ast.Constant)):
+                hits.append((node, f"`{fn.id}(...)` on a non-constant inside "
+                             f"traced function `{info.qualname}` "
+                             "concretizes a traced value"))
+    return _findings(ctx, "JL001", hits)
+
+
+def _dynamic_names(node) -> set:
+    """Names whose runtime VALUE the expression depends on.
+
+    Skips subtrees that are static at trace time: ``.shape``-style
+    attribute reads, ``len``/``isinstance`` calls, and pure
+    ``is``/``is not`` comparisons (structural ``None`` checks).
+    """
+    out: set[str] = set()
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return out
+        out |= _dynamic_names(node.value)
+        return out
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in _STATIC_CALLS:
+            return out
+        for child in ast.iter_child_nodes(node):
+            out |= _dynamic_names(child)
+        return out
+    if isinstance(node, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return out
+    if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+        out.add(node.id)
+        return out
+    for child in ast.iter_child_nodes(node):
+        out |= _dynamic_names(child)
+    return out
+
+
+def _assigned_names(target) -> set:
+    return {n.id for n in ast.walk(target)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)}
+
+
+@register_rule(
+    "JL005", "untraced-python-branch",
+    "Python if/while/for on values derived from traced parameters "
+    "either crashes at trace time or silently bakes one branch into "
+    "the compiled program; use lax.cond/scan or declare the argument "
+    "static")
+def check_untraced_branch(ctx: FileContext):
+    """Flag Python control flow on traced-parameter-derived values."""
+    hits = []
+    for info in ctx.traced_functions:
+        tainted = (set(info.params) - info.static_params
+                   - {"self", "cls"} - _STATIC_NAME_HINTS)
+        if not tainted:
+            continue
+        # one forward pass of taint propagation through plain
+        # assignments; names bound to list/tuple literals stay
+        # Python-structured (their LENGTH is static even when their
+        # elements are traced), so iterating them is fine
+        container_names: set[str] = set()
+        for node in ast.walk(info.node):
+            if isinstance(node, ast.Assign):
+                if isinstance(node.value, (ast.List, ast.Tuple,
+                                           ast.ListComp, ast.Dict,
+                                           ast.DictComp)):
+                    container_names |= _assigned_names(node.targets[0])
+                elif _dynamic_names(node.value) & tainted:
+                    for t in node.targets:
+                        tainted |= _assigned_names(t)
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                if node.value is not None \
+                        and _dynamic_names(node.value) & tainted:
+                    tainted |= _assigned_names(node.target)
+        tainted -= container_names
+        for node in FileContext._own_body_walk(info.node):
+            if isinstance(node, (ast.If, ast.While)):
+                dyn = _dynamic_names(node.test) & tainted
+                if dyn:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    hits.append((node, f"Python `{kind}` on traced value(s) "
+                                 f"{sorted(dyn)} in `{info.qualname}`; use "
+                                 "jnp.where/lax.cond or mark the argument "
+                                 "static"))
+            elif isinstance(node, ast.For):
+                dyn = _dynamic_names(node.iter) & tainted
+                if dyn:
+                    hits.append((node, "Python `for` over traced value(s) "
+                                 f"{sorted(dyn)} in `{info.qualname}`; use "
+                                 "lax.scan/fori_loop"))
+    return _findings(ctx, "JL005", hits)
+
+
+def _calls_pallas(info, ctx: FileContext, seen=None) -> bool:
+    """Whether a function (transitively, intra-module) calls pallas_call."""
+    if seen is None:
+        seen = set()
+    if id(info.node) in seen:
+        return False
+    seen.add(id(info.node))
+    for node in FileContext._own_body_walk(info.node):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = ctx.resolve(node.func)
+        if dotted.rsplit(".", 1)[-1] == "pallas_call":
+            return True
+        if isinstance(node.func, ast.Name):
+            for callee in ctx.functions_by_name.get(node.func.id, []):
+                if _calls_pallas(callee, ctx, seen):
+                    return True
+    return False
+
+
+@register_rule(
+    "JL006", "vmap-of-pallas_call",
+    "kernels are batch-native ((batch, tile) grid); vmapping a "
+    "pallas_call or a repro.kernels op re-creates the per-lane "
+    "dispatch PR 3 eliminated")
+def check_vmap_of_pallas(ctx: FileContext):
+    """Flag ``vmap`` applied to pallas kernels or repro.kernels ops."""
+    hits = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        if ctx.resolve(node.func) not in ("jax.vmap", "jax.api.vmap"):
+            continue
+        target = node.args[0]
+        reason = None
+        if isinstance(target, ast.Call) \
+                and ctx.resolve(target.func).rsplit(".", 1)[-1] \
+                == "pallas_call":
+            reason = "a pallas_call"
+        else:
+            dotted = ctx.resolve(target)
+            if dotted.startswith("repro.kernels"):
+                reason = f"`{dotted}` (a batch-native repro.kernels op)"
+            elif isinstance(target, ast.Name):
+                for info in ctx.functions_by_name.get(target.id, []):
+                    if _calls_pallas(info, ctx):
+                        reason = (f"`{target.id}`, which dispatches a "
+                                  "pallas_call")
+                        break
+        if reason:
+            hits.append((node, f"vmap over {reason}; kernels take leading "
+                         "batch axes natively — pass the stacked array "
+                         "instead"))
+    return _findings(ctx, "JL006", hits)

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..precision import PrecisionPolicy, resolve_precision
+from ..precision import DEFAULT_PRECISION, PrecisionPolicy, resolve_precision
 
 __all__ = [
     "StratumTables",
@@ -717,13 +717,15 @@ jax.tree_util.register_pytree_node(
 
 
 def trial_stats_init(batch_shape, *, bins: int = TRIAL_HIST_BINS,
-                     accum_dtype=np.float32, xp=np) -> TrialStats:
+                     accum_dtype=None, xp=np) -> TrialStats:
     """Zeroed accumulator for ``batch_shape`` lanes (the scan carry init).
 
-    ``accum_dtype`` is the float-moment dtype (``PrecisionPolicy.accum``);
-    the counters and sketches are int32 regardless — they are exact in
-    any policy.
+    ``accum_dtype`` is the float-moment dtype, defaulting to the
+    policy's ``PrecisionPolicy.accum``; the counters and sketches are
+    int32 regardless — they are exact in any policy.
     """
+    if accum_dtype is None:
+        accum_dtype = DEFAULT_PRECISION.accum_dtype
     bs = tuple(batch_shape)
     zi = xp.zeros(bs, np.int32)
     zf = xp.zeros(bs, accum_dtype)

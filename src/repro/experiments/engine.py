@@ -204,7 +204,7 @@ def _offset_bincount(labels: np.ndarray, valid: np.ndarray,
     entries (one ``_segment_sums_counts`` dispatch)."""
     if weights is None:
         return _segment_sums_counts(labels, valid, num_strata,
-                                    np.ones(labels.shape, np.float32))[1]
+                                    np.ones(labels.shape))[1]
     return _segment_sums_counts(labels, valid, num_strata, weights)[0]
 
 

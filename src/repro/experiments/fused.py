@@ -122,7 +122,8 @@ def _dev_config_matrix(cfgs):
     by contract, and an f64 matrix would promote the in-trace CPI
     evaluation away from the staged ``cpi_bank`` dispatch's ulps.
     """
-    return jnp.asarray(config_matrix(cfgs), jnp.float32)
+    mat = config_matrix(cfgs)
+    return jnp.asarray(mat, jnp.float32)  # jaxlint: disable=JL003
 
 
 def _traced_summarize(labels, valid, num_strata, values, precision=None):

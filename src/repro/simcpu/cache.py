@@ -30,6 +30,11 @@ accounting meaningless.
 
 from __future__ import annotations
 
+# jaxlint: disable-file=JL003 — MemoBank's (A, C, N) cpi table is
+# float32 storage BY CONTRACT: device mirrors of the table (the fused
+# sweep's block cache) must match it bit-for-bit, so the storage dtype
+# is part of the memo contract, not a PrecisionPolicy leak.
+
 from typing import Optional, Sequence
 
 import numpy as np

@@ -22,6 +22,10 @@ simulator checkpoint.
 
 from __future__ import annotations
 
+# jaxlint: disable-file=JL003 — the perf model is float32 BY CONTRACT
+# (deterministic bit-identical CPI across dispatch paths keys the
+# MemoBank); its dtypes are the contract itself, not policy leaks.
+
 import functools
 from typing import Mapping, Sequence
 

@@ -1,0 +1,1 @@
+"""Local pytest plugins (loaded via the repo-root ``conftest.py``)."""

@@ -1,0 +1,78 @@
+"""Pytest plugin: count real XLA backend compilations via jax.monitoring.
+
+The static side of trace discipline lives in ``repro.analysis``
+(jaxlint); this is the runtime teeth. It hooks jax's monitoring bus —
+``jax.monitoring.register_event_duration_secs_listener`` — and counts
+the ``/jax/core/compile/backend_compile_duration`` event, which fires
+only when XLA actually compiles a program. A warm call that hits the
+jit cache emits nothing (unlike the plain event listener, which fires
+on cache hits too), so the counter is a precise recompile detector.
+
+Hot-path tests use the ``compile_counter`` fixture with the
+snapshot-after-warmup pattern::
+
+    run_sweep(engine, spec)                       # warm: trace+compile
+    with compile_counter.no_recompile("2nd identical sweep"):
+        run_sweep(engine, spec)                   # must hit the cache
+
+A failure means the second identical call retraced and recompiled —
+the exact regression class (shape-dependent Python, unhashable or
+unstable static args, rebuilt wrappers) the fused sweep megaprogram
+and the streaming trial engine must never reintroduce.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import pytest
+
+__all__ = ["CompileCounter", "compile_counter"]
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class CompileCounter:
+    """Process-global monotone counter of XLA backend compilations."""
+
+    def __init__(self):
+        self.count = 0
+        self._installed = False
+
+    def _install(self):
+        if self._installed:
+            return
+        import jax.monitoring
+
+        def _on_duration(event, duration, **kwargs):
+            if event == _COMPILE_EVENT:
+                self.count += 1
+
+        jax.monitoring.register_event_duration_secs_listener(_on_duration)
+        self._installed = True
+
+    def snapshot(self) -> int:
+        """Current compile count (compare after a warm call)."""
+        return self.count
+
+    @contextlib.contextmanager
+    def no_recompile(self, label: str = "this block"):
+        """Fail the test if any backend compile happens inside the block."""
+        before = self.count
+        yield self
+        delta = self.count - before
+        if delta:
+            pytest.fail(
+                f"{delta} XLA backend compilation(s) during {label} — the "
+                "call was expected to hit the jit cache; something in the "
+                "hot path retraces on identical inputs (recompile guard)")
+
+
+_COUNTER = CompileCounter()
+
+
+@pytest.fixture()
+def compile_counter() -> CompileCounter:
+    """The process-global :class:`CompileCounter`, listener installed."""
+    _COUNTER._install()
+    return _COUNTER

@@ -345,6 +345,21 @@ def test_fused_sweep_donation_safety(engine):
         assert marker["donated"] is True
 
 
+def test_fused_sweep_warm_call_does_not_recompile(engine, compile_counter):
+    """A second identical fused sweep reuses the compiled megaprogram.
+
+    The first call traces and compiles; the second — same apps, plan,
+    config subset, shapes — must hit the jit cache even though the memo
+    tables were charged (mutated) in between: table CONTENT flows in as
+    device buffers, never as trace constants (recompile guard teeth)."""
+    spec = SweepSpec(apps=(APP,),
+                     plan=SamplingPlan.from_strings("rfv", "centroid"),
+                     config_indices=(0, 3))
+    run_sweep(engine, spec)                       # warm: trace + compile
+    with compile_counter.no_recompile("second identical fused sweep"):
+        run_sweep(engine, spec)
+
+
 def test_staged_sweep_marker_not_fused(engine):
     """The staged fallback records a non-fused, non-donated dispatch."""
     import dataclasses

@@ -134,6 +134,19 @@ def test_half_width_pct_streams(engine):
                                rtol=1e-4)
 
 
+def test_run_trials_warm_call_does_not_recompile(engine, compile_counter):
+    """A second identical ``run_trials`` hits the compiled chunk scan.
+
+    Same spec, apps, chunking — the trial program must come back from
+    the jit cache; a retrace here means the chunk scan's shapes or
+    static args are derived from something unstable (recompile guard
+    teeth on the streaming hot path)."""
+    spec = TrialSpec(trials=TRIAL_BLOCK * 2, schemes=("random",))
+    run_trials(engine, spec, apps=(APP,))         # warm: trace + compile
+    with compile_counter.no_recompile("second identical run_trials"):
+        run_trials(engine, spec, apps=(APP,))
+
+
 # ------------------------------------------------ scale + calibration gate
 def test_100k_trials_stream_with_calibrated_coverage(engine):
     """10^5 trials run through the chunked scan in bounded memory (no
